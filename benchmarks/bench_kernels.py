@@ -1,0 +1,53 @@
+"""Kernel micro-benchmarks (interpret mode on CPU — wall time is a
+correctness-path cost, not TPU perf; the derived column reports the
+work done: cell-pairs, attention FLOPs, pages touched)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention import ops as flash_ops
+from repro.kernels.paged_attention.ops import paged_decode_attention
+from repro.kernels.simjoin import ops as sj_ops
+
+
+def _time(fn, *args, n=3, **kwargs):
+    fn(*args, **kwargs)                        # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args, **kwargs)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run(print_rows: bool = True):
+    rng = np.random.default_rng(0)
+    rows = []
+    a = jnp.asarray(rng.integers(0, 1000, (512, 3)), jnp.int32)
+    us = _time(sj_ops.count_similar_pairs, a, a, 2, True)
+    rows.append(("kernel/simjoin_512x512x3", us, 512 * 512))
+
+    q = jnp.asarray(rng.normal(size=(1, 256, 4, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 256, 2, 64)), jnp.bfloat16)
+    us = _time(flash_ops.flash_attention, q, k, k, causal=True)
+    rows.append(("kernel/flash_256_gqa2", us,
+                 2 * 256 * 256 * 4 * 64 * 2))
+
+    kp = jnp.asarray(rng.normal(size=(64, 16, 4, 64)), jnp.bfloat16)
+    qd = jnp.asarray(rng.normal(size=(4, 8, 64)), jnp.bfloat16)
+    table = jnp.asarray(rng.permutation(64)[:4 * 4].reshape(4, 4), jnp.int32)
+    lens = jnp.full((4,), 64, jnp.int32)
+    us = _time(paged_decode_attention, qd, kp, kp, table, lens)
+    rows.append(("kernel/paged_decode_4x4pages", us, 4 * 4 * 16))
+
+    if print_rows:
+        for name, us, derived in rows:
+            print(f"{name},{us:.0f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

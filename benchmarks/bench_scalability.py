@@ -1,0 +1,37 @@
+"""Figure 6: improvement over file_lru across a 100-query PTF stress
+workload with a generous cache budget (favoring LRU, as in the paper)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (build_ptf, cell_anchors, dataset_bytes,
+                               make_cluster, timed)
+from repro.core.cluster import workload_summary
+from repro.core.workload import ptf_stress_workload
+
+
+def run(n_queries: int = 100, print_rows: bool = True):
+    catalog, reader = build_ptf("hdf5", n_files=16, cells=2500, seed=31)
+    queries = ptf_stress_workload(catalog.domain, n_queries=n_queries,
+                                  eps=300,
+                                  anchors=cell_anchors(catalog, reader))
+    budget = dataset_bytes(catalog) // 8          # generous: favors LRU
+    times = {}
+    for policy in ("file_lru", "chunk_lru", "cost"):
+        cluster = make_cluster(catalog, reader, policy, budget)
+        executed, us = timed(cluster.run_workload, queries)
+        times[policy] = [e.time_total_s for e in executed]
+        if print_rows:
+            print(f"fig6/{policy},{us:.0f},"
+                  f"{workload_summary(executed)['total_time_s']:.3f}")
+    base = np.asarray(times["file_lru"])
+    for policy in ("chunk_lru", "cost"):
+        imp = base / np.maximum(np.asarray(times[policy]), 1e-9)
+        if print_rows:
+            print(f"fig6/median_improvement_{policy},0,"
+                  f"{float(np.median(imp)):.2f}")
+    return times
+
+
+if __name__ == "__main__":
+    run()

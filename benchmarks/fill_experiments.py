@@ -1,0 +1,19 @@
+"""Fill EXPERIMENTS.md placeholders from the final dry-run JSONLs."""
+from __future__ import annotations
+
+from benchmarks.roofline_report import load, perf_summary, table
+
+
+def main() -> None:
+    base = load("results_final_baseline.jsonl")
+    opt = load("results_final_opt.jsonl")
+    text = open("EXPERIMENTS.md").read()
+    text = text.replace("<!-- ROOFLINE_TABLE -->", table(opt, "pod"))
+    text = text.replace("<!-- PERF_SUMMARY_TABLE -->",
+                        perf_summary(base, opt, "pod"))
+    open("EXPERIMENTS.md", "w").write(text)
+    print("EXPERIMENTS.md tables filled.")
+
+
+if __name__ == "__main__":
+    main()

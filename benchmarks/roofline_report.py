@@ -1,0 +1,77 @@
+"""Render the dry-run JSONL (launch/dryrun.py --out) as the EXPERIMENTS.md
+roofline table."""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import List
+
+
+def load(path: str) -> List[dict]:
+    return [json.loads(l) for l in open(path)]
+
+
+def table(rows: List[dict], mesh: str = "pod") -> str:
+    out = ["| arch | shape | chips | compute s | memory s | collective s |"
+           " serial s | dominant | useful | roofline | HBM/chip |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skip":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | "
+                       f"SKIP: {r['reason']} | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | FAILED | | | | "
+                       f"| | | |")
+            continue
+        hbm = (r.get("hbm_per_chip") or 0) / 1e9
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['chips']} "
+            f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+            f"| {r['collective_s']:.2e} | {r.get('serial_s', 0):.2e} "
+            f"| {r['bottleneck']} "
+            f"| {r['useful_ratio']:.1%} | {r['roofline_fraction']:.2%} "
+            f"| {hbm:.1f} GB |")
+    return "\n".join(out)
+
+
+def perf_summary(baseline: List[dict], optimized: List[dict],
+                 mesh: str = "pod") -> str:
+    def key(r):
+        return (r["arch"], r["shape"])
+
+    def ceiling(r):
+        return max(r["compute_s"], r["memory_s"], r["collective_s"],
+                   r.get("serial_s", 0.0))
+
+    base = {key(r): r for r in baseline
+            if r.get("mesh") == mesh and r["status"] == "ok"}
+    opt = {key(r): r for r in optimized
+           if r.get("mesh") == mesh and r["status"] == "ok"}
+    out = ["| arch | shape | baseline ceiling s | optimized ceiling s |"
+           " speedup | roofline before → after |",
+           "|---|---|---|---|---|---|"]
+    for k in sorted(base):
+        if k not in opt:
+            continue
+        b, o = base[k], opt[k]
+        cb, co = ceiling(b), ceiling(o)
+        out.append(
+            f"| {k[0]} | {k[1]} | {cb:.2e} | {co:.2e} "
+            f"| {cb / max(co, 1e-12):.2f}× "
+            f"| {b['roofline_fraction']:.2%} → {o['roofline_fraction']:.2%} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jsonl", default="results_baseline.jsonl")
+    ap.add_argument("--mesh", default="pod")
+    args = ap.parse_args()
+    print(table(load(args.jsonl), args.mesh))
+
+
+if __name__ == "__main__":
+    main()

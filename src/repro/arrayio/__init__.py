@@ -1,0 +1,10 @@
+"""Raw array I/O: file formats, catalog, and synthetic dataset generators."""
+from repro.arrayio.formats import (FORMATS, read_array_file,
+                                   write_array_file)
+from repro.arrayio.catalog import Catalog, FileReader, build_catalog
+from repro.arrayio.generator import (GeneratedFile, make_geo_files,
+                                     make_ptf_files)
+
+__all__ = ["FORMATS", "read_array_file", "write_array_file", "Catalog",
+           "FileReader", "build_catalog", "GeneratedFile", "make_geo_files",
+           "make_ptf_files"]

@@ -1,0 +1,8 @@
+from repro.configs.base import MambaConfig, ModelConfig, MoEConfig
+from repro.configs.registry import ARCHS, get, list_archs, reduced
+from repro.configs.shapes import (SHAPES, SHAPES_BY_NAME, ShapeConfig,
+                                  cells_for, shape_applicable)
+
+__all__ = ["MambaConfig", "ModelConfig", "MoEConfig", "ARCHS", "get",
+           "list_archs", "reduced", "SHAPES", "SHAPES_BY_NAME",
+           "ShapeConfig", "cells_for", "shape_applicable"]

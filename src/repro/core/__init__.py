@@ -1,0 +1,33 @@
+"""Core of the paper: distributed cost-based caching for raw arrays.
+
+Public API:
+  * geometry.Box — integer hyper-rectangles
+  * rtree.EvolvingRTree — query-driven chunking (Alg. 1)
+  * eviction.cost_based_eviction — Alg. 2 (+ LRUCache baselines)
+  * placement.cost_based_placement — Alg. 3 (+ static baseline)
+  * coordinator.CacheCoordinator — the Figure-2 planning pipeline
+  * cluster.RawArrayCluster — simulated shared-nothing execution + cost model
+  * workload — PTF-1 / PTF-2 / GEO query generators
+"""
+from repro.core.geometry import Box, bounding_box, expand
+from repro.core.chunk import Chunk, ChunkMeta, FileMeta
+from repro.core.rtree import EvolvingRTree, RefineStats
+from repro.core.eviction import (LRUCache, Triple, EvictionResult,
+                                 cost_based_eviction)
+from repro.core.placement import (JoinRecord, PlacementResult,
+                                  cost_based_placement, static_placement)
+from repro.core.join_planner import JoinPlan, candidate_pairs, plan_join
+from repro.core.coordinator import (CacheCoordinator, QueryReport,
+                                    SimilarityJoinQuery)
+from repro.core.cluster import (CostModel, ExecutedQuery, RawArrayCluster,
+                                count_similar_pairs_np, workload_summary)
+
+__all__ = [
+    "Box", "bounding_box", "expand", "Chunk", "ChunkMeta", "FileMeta",
+    "EvolvingRTree", "RefineStats", "LRUCache", "Triple", "EvictionResult",
+    "cost_based_eviction", "JoinRecord", "PlacementResult",
+    "cost_based_placement", "static_placement", "JoinPlan",
+    "candidate_pairs", "plan_join", "CacheCoordinator", "QueryReport",
+    "SimilarityJoinQuery", "CostModel", "ExecutedQuery", "RawArrayCluster",
+    "count_similar_pairs_np", "workload_summary",
+]

@@ -1,0 +1,187 @@
+"""Shared-nothing cluster simulator + cost model (§4.1 System).
+
+The *algorithms* (chunking, planning, eviction, placement) and the *join
+compute* run for real; disk and network are replaced by a calibrated cost
+model (the container is one box, the paper's testbed was 8 workers + 1
+coordinator on HDD + GbE). Algorithmic quantities — bytes scanned, bytes
+shipped, cache contents, chunk counts, plan times — are exact; wall-clock is
+modeled as
+
+    t(query) = max_n scan_n + max_n net_n + max_n compute_n + t_opt(measured)
+
+with scan_n = scanned_bytes/disk_bw + decoded_cells/decode_rate(fmt),
+net_n = max(bytes_in, bytes_out)/net_bw (full-duplex switch), and
+compute_n = assigned cell-pair work / pair_rate. Defaults follow §4.1:
+125 MB/s disk and network. A TPU-pod profile (PCIe host link + ICI) is
+provided for the framework integration experiments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+if TYPE_CHECKING:  # duck-typed at runtime to avoid a package cycle
+    from repro.arrayio.catalog import Catalog, FileReader
+from repro.arrayio.formats import DECODE_CELLS_PER_SEC
+from repro.core.coordinator import (CacheCoordinator, QueryReport,
+                                    SimilarityJoinQuery)
+from repro.core.geometry import Box, points_in_box
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    disk_bw: float = 125e6               # B/s  (§4.1: HDD ~ GbE)
+    net_bw: float = 125e6                # B/s per node link
+    cell_pairs_per_sec: float = 5e8      # join predicate throughput per node
+    decode_rates: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: dict(DECODE_CELLS_PER_SEC))
+
+    @staticmethod
+    def tpu_pod_host() -> "CostModel":
+        """v5e-host profile: raw shards on host NVMe/DRAM, PCIe to device,
+        ICI between pods' hosts (DESIGN.md hardware-adaptation notes)."""
+        return CostModel(disk_bw=3.2e9, net_bw=50e9, cell_pairs_per_sec=2e11,
+                         decode_rates={k: v * 50 for k, v in
+                                       DECODE_CELLS_PER_SEC.items()})
+
+
+def count_similar_pairs_np(a: np.ndarray, b: np.ndarray, eps: int,
+                           same: bool, block: int = 4096) -> int:
+    """Unordered (x != y) L1-neighbor pairs between cell coordinate sets.
+    Blocked to bound memory; numpy reference executor."""
+    if a.shape[0] == 0 or b.shape[0] == 0:
+        return 0
+    total = 0
+    for i0 in range(0, a.shape[0], block):
+        ai = a[i0:i0 + block]
+        for j0 in range(0, b.shape[0], block):
+            bj = b[j0:j0 + block]
+            dist = np.abs(ai[:, None, :].astype(np.int64)
+                          - bj[None, :, :].astype(np.int64)).sum(axis=2)
+            hit = dist <= eps
+            if same:
+                # Count each unordered pair once; drop identical cells.
+                ii = i0 + np.arange(ai.shape[0])[:, None]
+                jj = j0 + np.arange(bj.shape[0])[None, :]
+                hit &= ii < jj
+            total += int(hit.sum())
+    return total
+
+
+@dataclasses.dataclass
+class ExecutedQuery:
+    report: QueryReport
+    time_scan_s: float
+    time_net_s: float
+    time_compute_s: float
+    time_opt_s: float
+    matches: Optional[int]
+
+    @property
+    def time_total_s(self) -> float:
+        return (self.time_scan_s + self.time_net_s + self.time_compute_s
+                + self.time_opt_s)
+
+
+class RawArrayCluster:
+    """N simulated worker nodes + coordinator, wired to the caching stack."""
+
+    def __init__(self, catalog: "Catalog", reader: "FileReader", n_nodes: int,
+                 node_budget_bytes: int, policy: str = "cost",
+                 placement_mode: str = "dynamic", min_cells: int = 256,
+                 cost_model: Optional[CostModel] = None,
+                 join_fn: Optional[Callable[..., int]] = None,
+                 execute_joins: bool = True):
+        self.catalog = catalog
+        self.reader = reader
+        self.n_nodes = n_nodes
+        self.cost = cost_model or CostModel()
+        self.join_fn = join_fn or count_similar_pairs_np
+        self.execute_joins = execute_joins
+        self.coordinator = CacheCoordinator(
+            catalog, reader, n_nodes, node_budget_bytes, policy=policy,
+            placement_mode=placement_mode, min_cells=min_cells)
+
+    # ----------------------------------------------------------- execution
+
+    def _queried_coords(self, chunk_id: int, file_id: int,
+                        box: Box) -> np.ndarray:
+        if chunk_id < 0:   # file-granularity unit (file_lru)
+            coords, _ = self.reader.read(file_id)
+        else:
+            tree = self.coordinator.trees[file_id]
+            chunk = tree.get_chunk(chunk_id)
+            coords = tree.coords[chunk.cell_idx]
+        return coords[points_in_box(coords, box)]
+
+    def run_query(self, query: SimilarityJoinQuery) -> ExecutedQuery:
+        report = self.coordinator.process_query(query)
+        cm = {c.chunk_id: c for c in report.queried_chunks}
+
+        # --- modeled scan phase
+        scan_n: Dict[int, float] = {}
+        for node, nbytes in report.scan_bytes_by_node.items():
+            scan_n[node] = nbytes / self.cost.disk_bw
+        for node, per_fmt in report.decode_cells_by_node.items():
+            for fmt, cells in per_fmt.items():
+                scan_n[node] = (scan_n.get(node, 0.0)
+                                + cells / self.cost.decode_rates[fmt])
+        time_scan = max(scan_n.values(), default=0.0)
+
+        # --- modeled network phase (join shipping + placement fallbacks)
+        time_net = 0.0
+        if report.join_plan is not None:
+            per_node = []
+            for n in range(self.n_nodes):
+                bi = report.join_plan.bytes_in.get(n, 0)
+                bo = report.join_plan.bytes_out.get(n, 0)
+                per_node.append(max(bi, bo))
+            time_net = max(per_node, default=0) / self.cost.net_bw
+        time_net += report.placement_extra_bytes / self.cost.net_bw
+
+        # --- join execution (real compute over queried cells)
+        matches: Optional[int] = None
+        work_by_node: Dict[int, int] = {}
+        if report.join_plan is not None:
+            if self.execute_joins:
+                matches = 0
+            coords_cache: Dict[int, np.ndarray] = {}
+            for (a, b), node in report.join_plan.pair_node.items():
+                for cid in (a, b):
+                    if cid not in coords_cache:
+                        coords_cache[cid] = self._queried_coords(
+                            cid, cm[cid].file_id, query.box)
+                ca, cb = coords_cache[a], coords_cache[b]
+                work_by_node[node] = (work_by_node.get(node, 0)
+                                      + ca.shape[0] * cb.shape[0])
+                if self.execute_joins:
+                    matches += self.join_fn(ca, cb, query.eps, a == b)
+        time_compute = (max(work_by_node.values(), default=0)
+                        / self.cost.cell_pairs_per_sec)
+
+        t_opt = report.opt_time_chunking_s + report.opt_time_evict_place_s
+        return ExecutedQuery(report=report, time_scan_s=time_scan,
+                             time_net_s=time_net,
+                             time_compute_s=time_compute,
+                             time_opt_s=t_opt, matches=matches)
+
+    def run_workload(self, queries: Sequence[SimilarityJoinQuery]
+                     ) -> List[ExecutedQuery]:
+        return [self.run_query(q) for q in queries]
+
+
+def workload_summary(executed: Sequence[ExecutedQuery]) -> Dict[str, float]:
+    return {
+        "total_time_s": sum(e.time_total_s for e in executed),
+        "scan_time_s": sum(e.time_scan_s for e in executed),
+        "net_time_s": sum(e.time_net_s for e in executed),
+        "compute_time_s": sum(e.time_compute_s for e in executed),
+        "opt_time_s": sum(e.time_opt_s for e in executed),
+        "bytes_scanned": float(sum(sum(e.report.scan_bytes_by_node.values())
+                                   for e in executed)),
+        "files_scanned": float(sum(len(e.report.files_scanned)
+                                   for e in executed)),
+        "queries": float(len(executed)),
+    }

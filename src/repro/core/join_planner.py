@@ -1,0 +1,109 @@
+"""Similarity-join planning over cached chunks (§2.2, derived from [63]).
+
+Given the queried chunks (with current locations) and the join shape radius
+``eps`` (L^1 / L^inf neighborhood), the planner:
+
+  1. enumerates candidate chunk pairs — pairs whose bounding boxes, one side
+     expanded by ``eps``, overlap (a superset of the true joining pairs);
+  2. assigns every pair to a node minimizing shipped bytes, breaking ties by
+     projected compute load (|C_i| * |C_j| cell-pair work), which yields the
+     transfer/balance trade-off the optimizer in [63] targets;
+  3. emits the per-node execution sub-plan and the transfer list. Every
+     shipped chunk creates a *replica* — the input that cache placement
+     (Alg. 3) later consolidates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.core.chunk import ChunkMeta
+from repro.core.geometry import Box, expand
+
+
+@dataclasses.dataclass
+class JoinPlan:
+    pairs: List[Tuple[int, int]]                 # candidate chunk-id pairs
+    pair_node: Dict[Tuple[int, int], int]        # pair -> executing node
+    transfers: List[Tuple[int, int]]             # (chunk_id, dest node)
+    bytes_in: Dict[int, int]                     # per-node received bytes
+    bytes_out: Dict[int, int]                    # per-node sent bytes
+    compute_load: Dict[int, int]                 # per-node cell-pair work
+    replicas: Dict[int, Set[int]]                # chunk -> nodes holding it
+
+
+def candidate_pairs(chunks: Sequence[ChunkMeta], eps: int,
+                    query: Optional[Box] = None) -> List[Tuple[int, int]]:
+    """Self-join candidate pairs (i <= j), including the self pair, for
+    chunks whose eps-expanded boxes overlap."""
+    out: List[Tuple[int, int]] = []
+    metas = sorted(chunks, key=lambda c: c.chunk_id)
+    for a in range(len(metas)):
+        ca = metas[a]
+        grown = expand(ca.box, eps)
+        for b in range(a, len(metas)):
+            cb = metas[b]
+            if a == b or grown.overlaps(cb.box):
+                out.append((ca.chunk_id, cb.chunk_id))
+    return out
+
+
+def plan_join(chunks: Sequence[ChunkMeta],
+              locations: Dict[int, int],
+              eps: int,
+              n_nodes: int) -> JoinPlan:
+    """Assign candidate pairs to nodes. ``locations[c]`` is where chunk ``c``
+    is resident when the query starts (cache location, or the home node right
+    after a raw scan)."""
+    meta = {c.chunk_id: c for c in chunks}
+    pairs = candidate_pairs(chunks, eps)
+    # Order pairs by decreasing work so the balance heuristic sees the big
+    # rocks first (classic LPT scheduling).
+    pairs.sort(key=lambda p: -(meta[p[0]].n_cells * meta[p[1]].n_cells))
+
+    node_has: Dict[int, Set[int]] = {n: set() for n in range(n_nodes)}
+    for cid, node in locations.items():
+        node_has[node].add(cid)
+    load: Dict[int, int] = {n: 0 for n in range(n_nodes)}
+    bytes_in: Dict[int, int] = {n: 0 for n in range(n_nodes)}
+    bytes_out: Dict[int, int] = {n: 0 for n in range(n_nodes)}
+    pair_node: Dict[Tuple[int, int], int] = {}
+    transfers: List[Tuple[int, int]] = []
+
+    mean_load_target = (sum(meta[a].n_cells * meta[b].n_cells
+                            for a, b in pairs) / max(n_nodes, 1)) or 1.0
+
+    for a, b in pairs:
+        ca, cb = meta[a], meta[b]
+        work = ca.n_cells * cb.n_cells
+        best_node, best_cost = None, None
+        for n in range(n_nodes):
+            ship = 0
+            if a not in node_has[n]:
+                ship += ca.nbytes
+            if b not in node_has[n] and a != b:
+                ship += cb.nbytes
+            # Cost: bytes shipped, with a balance penalty proportional to the
+            # node's projected overload (keeps the plan from piling compute
+            # on the chunk-rich node).
+            cost = (ship, max(0.0, (load[n] + work) / mean_load_target - 1.0))
+            if best_cost is None or cost < best_cost:
+                best_node, best_cost = n, cost
+        n = best_node
+        assert n is not None
+        pair_node[(a, b)] = n
+        load[n] += work
+        for cid in {a, b}:
+            if cid not in node_has[n]:
+                src = locations[cid]
+                node_has[n].add(cid)
+                transfers.append((cid, n))
+                bytes_in[n] += meta[cid].nbytes
+                bytes_out[src] += meta[cid].nbytes
+
+    replicas: Dict[int, Set[int]] = {}
+    for cid in meta:
+        replicas[cid] = {n for n in range(n_nodes) if cid in node_has[n]}
+    return JoinPlan(pairs=pairs, pair_node=pair_node, transfers=transfers,
+                    bytes_in=bytes_in, bytes_out=bytes_out,
+                    compute_load=load, replicas=replicas)

@@ -1,0 +1,1 @@
+"""Input pipeline over the distributed raw-array cache."""

@@ -1,0 +1,89 @@
+"""Flash attention forward kernel (pl.pallas_call + BlockSpec VMEM tiling).
+
+Grid (B, H, Sq/bq). Each program holds one (bq, D) query tile in VMEM plus
+the full (S, D) K/V stripe of its KV head (GQA maps q-head h to kv-head
+h // rep via the BlockSpec index_map — no materialized KV expansion), and
+runs the online-softmax recurrence over (bk, D) chunks with fp32
+accumulators. Causal masking uses global indices so any (bq, bk) pairing is
+correct, including rectangular Sq != Sk (decode-append prefill).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bk: int, causal: bool,
+                  sm_scale: float, q_offset: int):
+    bq, d = q_ref.shape[-2:]
+    sk = k_ref.shape[-2]
+    q = q_ref[0, 0].astype(jnp.float32) * sm_scale       # (bq, d)
+    iq = pl.program_id(2)
+
+    def body(j, carry):
+        acc, m, l = carry
+        k = k_ref[0, 0, pl.dslice(j * bk, bk), :].astype(jnp.float32)
+        v = v_ref[0, 0, pl.dslice(j * bk, bk), :].astype(jnp.float32)
+        s = q @ k.T                                      # (bq, bk)
+        if causal:
+            qi = iq * bq + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bk), 0) + q_offset
+            kj = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kj <= qi, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=1)
+        acc = acc * corr[:, None] + p @ v
+        return acc, m_new, l_new
+
+    nk = sk // bk
+    if causal:
+        # Skip fully-masked KV blocks: block j is live iff
+        # j*bk <= (iq+1)*bq - 1 + q_offset.
+        nk_live = jnp.minimum(
+            nk, ((iq + 1) * bq + q_offset + bk - 1) // bk)
+    else:
+        nk_live = nk
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, nk_live, body, (acc0, m0, l0))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, bq: int = 128, bk: int = 128,
+                        q_offset: int = 0,
+                        interpret: bool = True) -> jax.Array:
+    """q: (B, H, Sq, D); k, v: (B, Hk, Sk, D) with H % Hk == 0.
+    Sq % bq == 0 and Sk % bk == 0 (ops.py pads)."""
+    b, h, sq, d = q.shape
+    _, hk, sk, _ = k.shape
+    assert h % hk == 0 and sq % bq == 0 and sk % bk == 0
+    rep = h // hk
+    sm_scale = 1.0 / math.sqrt(d)
+    kernel = functools.partial(_flash_kernel, bk=bk, causal=causal,
+                               sm_scale=sm_scale, q_offset=q_offset)
+    grid = (b, h, sq // bq)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda ib, ih, iq: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, sk, d),
+                         lambda ib, ih, iq: (ib, ih // rep, 0, 0)),
+            pl.BlockSpec((1, 1, sk, d),
+                         lambda ib, ih, iq: (ib, ih // rep, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda ib, ih, iq: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for flash attention (fp32 softmax, GQA broadcast)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, q_offset: int = 0) -> jax.Array:
+    """q: (B, H, Sq, D); k, v: (B, Hk, Sk, D)."""
+    b, h, sq, d = q.shape
+    _, hk, sk, _ = k.shape
+    rep = h // hk
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    if causal:
+        qi = jnp.arange(sq)[:, None] + q_offset
+        kj = jnp.arange(sk)[None, :]
+        s = jnp.where(kj <= qi, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

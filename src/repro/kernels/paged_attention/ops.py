@@ -1,0 +1,15 @@
+"""jit'd wrapper for paged decode attention with interpret fallback."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.paged_attention.paged_attention import paged_attention
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_pages, v_pages, page_table, seq_lens,
+                           interpret: bool = True):
+    return paged_attention(q, k_pages, v_pages, page_table, seq_lens,
+                           interpret=interpret)

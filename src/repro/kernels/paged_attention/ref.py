@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for paged decode attention: gather pages into a dense KV
+cache, run masked softmax attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(q: jax.Array, k_pages: jax.Array,
+                        v_pages: jax.Array, page_table: jax.Array,
+                        seq_lens: jax.Array) -> jax.Array:
+    b, h, d = q.shape
+    np_, ps, hk, _ = k_pages.shape
+    maxp = page_table.shape[1]
+    rep = h // hk
+    # Gather: (B, MAXP, PS, Hk, D) -> (B, S, Hk, D)
+    k = k_pages[page_table].reshape(b, maxp * ps, hk, d)
+    v = v_pages[page_table].reshape(b, maxp * ps, hk, d)
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    live = jnp.arange(maxp * ps)[None, None, :] < seq_lens[:, None, None]
+    s = jnp.where(live, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,44 @@
+"""jit'd wrapper around the simjoin Pallas kernel: padding, sentinel
+injection, block-count reduction, and a numpy-friendly entry point usable as
+``RawArrayCluster.join_fn``."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.simjoin.simjoin import BLOCK, SENTINEL, simjoin_block_counts
+
+
+def _pad_cm(x: jax.Array, sentinel: int) -> jax.Array:
+    """(N, d) -> coordinate-major (d, N_padded) with sentinel fill."""
+    n, d = x.shape
+    npad = (-n) % BLOCK
+    xt = jnp.transpose(x.astype(jnp.int32))
+    if npad or n == 0:
+        pad_n = npad if n else BLOCK
+        xt = jnp.pad(xt, ((0, 0), (0, pad_n)), constant_values=sentinel)
+    return xt
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "same", "interpret"))
+def count_similar_pairs(a: jax.Array, b: jax.Array, eps: int, same: bool,
+                        interpret: bool = True) -> jax.Array:
+    """Unordered L1-neighbor pair count between coordinate sets (see
+    ref.count_pairs_ref)."""
+    at = _pad_cm(a, SENTINEL)
+    bt = _pad_cm(b, -SENTINEL)
+    counts = simjoin_block_counts(at, bt, eps, same, interpret=interpret)
+    return counts.sum().astype(jnp.int32)
+
+
+def count_similar_pairs_np(a: np.ndarray, b: np.ndarray, eps: int,
+                           same: bool) -> int:
+    """Drop-in ``join_fn`` for repro.core.cluster.RawArrayCluster."""
+    if a.shape[0] == 0 or b.shape[0] == 0:
+        return 0
+    return int(count_similar_pairs(jnp.asarray(a, jnp.int32),
+                                   jnp.asarray(b, jnp.int32), int(eps),
+                                   bool(same)))

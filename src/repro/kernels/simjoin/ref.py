@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the simjoin kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def count_pairs_ref(a: jax.Array, b: jax.Array, eps: int,
+                    same: bool) -> jax.Array:
+    """a: (Na, d), b: (Nb, d) integer coords. Number of (x, y) pairs with
+    L1(x, y) <= eps; in self-join mode each unordered pair counts once and
+    identical indices are excluded."""
+    if a.shape[0] == 0 or b.shape[0] == 0:
+        return jnp.zeros((), jnp.int32)
+    dist = jnp.abs(a[:, None, :].astype(jnp.int64)
+                   - b[None, :, :].astype(jnp.int64)).sum(-1)
+    hit = dist <= eps
+    if same:
+        i = jnp.arange(a.shape[0])[:, None]
+        j = jnp.arange(b.shape[0])[None, :]
+        hit = jnp.logical_and(hit, i < j)
+    return hit.sum().astype(jnp.int32)

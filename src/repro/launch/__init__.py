@@ -1,0 +1,1 @@
+"""Launchers: mesh, multi-pod dry-run, HLO/roofline analysis, train/serve drivers."""

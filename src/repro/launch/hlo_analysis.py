@@ -1,0 +1,396 @@
+"""HLO cost analysis that is *loop-aware* and *collective-aware*.
+
+``compiled.cost_analysis()`` counts each ``while`` body exactly once, which
+under-counts scan-over-layers models by the trip count (verified empirically;
+see EXPERIMENTS.md §Dry-run methodology). This module re-derives
+per-device FLOPs, HBM bytes, and collective bytes by parsing the optimized
+HLO text:
+
+  * computations are parsed into instruction lists with result shapes;
+  * ``while`` trip counts are recovered from the loop-condition comparison
+    constant (jax scans lower to ``i < N`` with ``i0=0, i+=1``);
+  * ``fusion`` flops come from the fused computation, but its HBM bytes are
+    the fusion's operands+result (internals live in registers/VMEM);
+  * ``dot`` flops = 2 * prod(result) * prod(contracted dims);
+  * collective bytes sum operand sizes of all-reduce / all-gather /
+    reduce-scatter / all-to-all / collective-permute (incl. -start forms),
+    multiplied by enclosing trip counts; all-reduce counts 2x (ring =
+    reduce-scatter + all-gather).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_ARITH_OPS = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "negate", "abs", "floor",
+    "ceil", "sign", "compare", "select", "and", "or", "xor", "not",
+    "convert", "exponential-minus-one", "log-plus-one", "logistic",
+    "cosine", "sine", "atan2", "remainder", "clamp", "round-nearest-even",
+    "round-nearest-afz", "erf", "cbrt",
+}
+
+
+@dataclasses.dataclass
+class ShapeInfo:
+    elements: int
+    nbytes: int
+
+
+def parse_shape(text: str) -> ShapeInfo:
+    """Parse 'f32[128,256]{1,0}' or '(s32[], f32[2,3])' into totals."""
+    elements = 0
+    nbytes = 0
+    for m in re.finditer(r"([a-z0-9]+)\[([0-9,]*)\]", text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elements += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return ShapeInfo(elements, nbytes)
+
+
+def _shape_dims(text: str) -> List[int]:
+    m = re.search(r"[a-z0-9]+\[([0-9,]*)\]", text)
+    if not m or not m.group(1):
+        return []
+    return [int(d) for d in m.group(1).split(",")]
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    op: str
+    result_type: str
+    operands: List[str]
+    attrs: str
+    raw: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction]
+    shapes: Dict[str, str]          # instr/param name -> result type text
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\]"
+    r"(?:\{[^}]*\})?))\s*([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line.strip())
+            if m:
+                cur = Computation(m.group(1), [], {})
+                if line.strip().startswith("ENTRY"):
+                    entry = m.group(1)
+            continue
+        stripped = line.strip()
+        if stripped == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rtype, op, rest = m.groups()
+        # Operand names: %foo tokens inside the first (...) group.
+        depth = 1
+        args_text = []
+        for ch in rest:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            args_text.append(ch)
+        args = "".join(args_text)
+        attrs = rest[len(args) + 1:]
+        operands = re.findall(r"%([\w.\-]+)", args)
+        instr = Instruction(name, op, rtype, operands, attrs, line)
+        cur.instructions.append(instr)
+        cur.shapes[name] = rtype
+    # parameters: declared like "%param_0 = f32[...] parameter(0)" — covered.
+    return comps, entry
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    # Serialization: total loop iterations on the critical path (each is a
+    # dependent dispatch on real hardware — a latency floor a bytes/flops
+    # roofline cannot see; sequential recurrences are bound by this).
+    seq_iters: float = 0.0
+    coll_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_ops: List[Tuple[str, str, float, float]] = dataclasses.field(
+        default_factory=list)   # (kind, shape_text, bytes, trip_mult)
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.coll_bytes += other.coll_bytes * mult
+        self.seq_iters += other.seq_iters * mult
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + v * mult
+        for kind, st, b, m in other.coll_ops:
+            self.coll_ops.append((kind, st, b, m * mult))
+
+
+class HloAnalyzer:
+    def __init__(self, text: str):
+        self.comps, self.entry = parse_module(text)
+        self._memo: Dict[str, Cost] = {}
+
+    # ------------------------------------------------------------- helpers
+
+    def _operand_type(self, comp: Computation, name: str) -> str:
+        return comp.shapes.get(name, "")
+
+    def _trip_count(self, cond_name: str) -> int:
+        """Recover N from the loop condition 'i < N'."""
+        comp = self.comps.get(cond_name)
+        if comp is None:
+            return 1
+        consts: Dict[str, int] = {}
+        for ins in comp.instructions:
+            if ins.op == "constant":
+                m = re.search(r"constant\((-?\d+)\)", ins.raw)
+                if m:
+                    consts[ins.name] = int(m.group(1))
+        # Direct compare in the condition.
+        for ins in comp.instructions:
+            if ins.op == "compare":
+                for o in ins.operands:
+                    if o in consts:
+                        n = consts[o]
+                        return n + 1 if "direction=LE" in ins.attrs else n
+        # Compare wrapped in a fusion: constants are fusion operands.
+        for ins in comp.instructions:
+            if ins.op == "fusion":
+                vals = [consts[o] for o in ins.operands if o in consts]
+                if vals:
+                    called = re.search(r"calls=%([\w.\-]+)", ins.attrs)
+                    le = False
+                    if called and called.group(1) in self.comps:
+                        inner = self.comps[called.group(1)]
+                        le = any("direction=LE" in i.attrs
+                                 for i in inner.instructions
+                                 if i.op == "compare")
+                    n = max(vals)
+                    return n + 1 if le else n
+        if consts:
+            return max(consts.values())
+        return 1
+
+    def _dot_flops(self, comp: Computation, ins: Instruction) -> float:
+        res = parse_shape(ins.result_type).elements
+        lhs_type = self._operand_type(comp, ins.operands[0]) \
+            if ins.operands else ""
+        lhs_dims = _shape_dims(lhs_type)
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.attrs) or \
+            re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.raw)
+        k = 1
+        if m and m.group(1) and lhs_dims:
+            for d in m.group(1).split(","):
+                di = int(d)
+                if di < len(lhs_dims):
+                    k *= lhs_dims[di]
+        return 2.0 * res * k
+
+    # ----------------------------------------------------------- main walk
+
+    def computation_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        comp = self.comps.get(name)
+        cost = Cost()
+        if comp is None:
+            self._memo[name] = cost
+            return cost
+        self._memo[name] = cost      # break cycles defensively
+        for ins in comp.instructions:
+            self._instr_cost(comp, ins, cost)
+        return cost
+
+    def _instr_cost(self, comp: Computation, ins: Instruction,
+                    cost: Cost) -> None:
+        op = ins.op
+        res = parse_shape(ins.result_type)
+        base = op.replace("-start", "")
+        if base in _COLLECTIVES:
+            opbytes = sum(parse_shape(self._operand_type(comp, o)).nbytes
+                          for o in ins.operands)
+            opbytes = opbytes or res.nbytes
+            link = 2.0 * opbytes if base == "all-reduce" else float(opbytes)
+            cost.coll_bytes += link
+            cost.coll_by_kind[base] = cost.coll_by_kind.get(base, 0.) + link
+            cost.coll_ops.append((base, ins.result_type.split("{")[0],
+                                  link, 1.0))
+            cost.bytes += opbytes + res.nbytes
+            return
+        if op == "while":
+            body = re.search(r"body=%([\w.\-]+)", ins.attrs)
+            cond = re.search(r"condition=%([\w.\-]+)", ins.attrs)
+            trips = max(self._trip_count(cond.group(1)) if cond else 1, 1)
+            if body:
+                cost.add(self.computation_cost(body.group(1)), mult=trips)
+                cost.seq_iters += trips
+                # Loop-invariant operands (carried through unchanged, e.g.
+                # recurrent weight matrices) stay VMEM/cache-resident on
+                # TPU: discount their HBM traffic to a single pass.
+                inv = self._invariant_body_bytes(body.group(1))
+                cost.bytes -= inv * (trips - 1)
+            return
+        if op == "fusion":
+            called = re.search(r"calls=%([\w.\-]+)", ins.attrs)
+            if called:
+                inner = self.computation_cost(called.group(1))
+                cost.flops += inner.flops
+            sizes = [parse_shape(self._operand_type(comp, o)).nbytes
+                     for o in ins.operands]
+            if ("dynamic-update-slice" in ins.name or
+                    "scatter" in ins.name or "dynamic_update_slice"
+                    in ins.name):
+                # In-place update fusions alias the big target buffer:
+                # traffic is the update region (read+write), not the buffer.
+                big = max(sizes) if sizes else 0
+                cost.bytes += 2 * (sum(sizes) - big)
+            else:
+                cost.bytes += sum(sizes) + res.nbytes
+            return
+        if op in ("call", "async-start"):
+            called = re.search(r"(?:calls|called_computation)=%([\w.\-]+)",
+                               ins.attrs)
+            if called:
+                cost.add(self.computation_cost(called.group(1)))
+            return
+        if op == "conditional":
+            branches = re.findall(r"branch_computations=\{([^}]*)\}",
+                                  ins.attrs)
+            if branches:
+                names = re.findall(r"%([\w.\-]+)", branches[0])
+                costs = [self.computation_cost(n) for n in names]
+                if costs:
+                    best = max(costs, key=lambda c: c.flops)
+                    cost.add(best)
+            return
+        if op == "dot":
+            cost.flops += self._dot_flops(comp, ins)
+            opbytes = sum(parse_shape(self._operand_type(comp, o)).nbytes
+                          for o in ins.operands)
+            cost.bytes += opbytes + res.nbytes
+            return
+        if op == "convolution":
+            window = re.findall(r"size=([0-9x]+)", ins.attrs)
+            wprod = 1
+            if window:
+                for d in window[0].split("x"):
+                    wprod *= int(d)
+            cost.flops += 2.0 * res.elements * wprod
+            cost.bytes += res.nbytes * 2
+            return
+        if op in ("reduce", "reduce-window"):
+            opbytes = sum(parse_shape(self._operand_type(comp, o)).nbytes
+                          for o in ins.operands)
+            opelems = sum(parse_shape(self._operand_type(comp, o)).elements
+                          for o in ins.operands)
+            cost.flops += float(opelems)
+            cost.bytes += opbytes + res.nbytes
+            return
+        if op in ("custom-call", "custom_call"):
+            opbytes = sum(parse_shape(self._operand_type(comp, o)).nbytes
+                          for o in ins.operands)
+            cost.bytes += opbytes + res.nbytes
+            cost.flops += float(res.elements)
+            return
+        if op in _ARITH_OPS:
+            cost.flops += float(res.elements)
+            # Inside fused computations bytes don't hit HBM; top-level
+            # arithmetic is rare post-fusion, count conservatively.
+            cost.bytes += res.nbytes
+            return
+        if op in ("dynamic-update-slice", "scatter"):
+            sizes = [parse_shape(self._operand_type(comp, o)).nbytes
+                     for o in ins.operands]
+            big = max(sizes) if sizes else 0
+            cost.bytes += 2 * (sum(sizes) - big)   # aliased in-place update
+            return
+        if op in ("copy", "copy-start", "transpose", "reshape", "broadcast",
+                  "slice", "dynamic-slice", "concatenate",
+                  "gather", "pad", "reverse", "iota", "sort"):
+            opbytes = sum(parse_shape(self._operand_type(comp, o)).nbytes
+                          for o in ins.operands)
+            cost.bytes += opbytes + res.nbytes
+            return
+        # parameter/constant/tuple/get-tuple-element/bitcast/...: free.
+
+    def _invariant_body_bytes(self, body_name: str) -> float:
+        """Per-iteration bytes read from loop-invariant carries: tuple slots
+        whose ROOT output is exactly the input get-tuple-element (weights
+        threaded through a scan), counted once per consuming instruction."""
+        comp = self.comps.get(body_name)
+        if comp is None:
+            return 0.0
+        gte_by_name: Dict[str, int] = {}
+        for ins in comp.instructions:
+            if ins.op == "get-tuple-element":
+                m = re.search(r"index=(\d+)", ins.attrs) or \
+                    re.search(r"index=(\d+)", ins.raw)
+                if m:
+                    gte_by_name[ins.name] = int(m.group(1))
+        root = comp.instructions[-1] if comp.instructions else None
+        if root is None or root.op != "tuple":
+            return 0.0
+        passthrough: set = set()
+        for slot, operand in enumerate(root.operands):
+            if gte_by_name.get(operand) == slot:
+                passthrough.add(operand)
+        if not passthrough:
+            return 0.0
+        total = 0.0
+        for ins in comp.instructions:
+            if ins.op in ("tuple", "get-tuple-element"):
+                continue
+            for o in ins.operands:
+                if o in passthrough:
+                    total += parse_shape(comp.shapes.get(o, "")).nbytes
+        return total
+
+    def module_cost(self) -> Cost:
+        if self.entry is None:
+            # Fall back: the computation with the most instructions.
+            name = max(self.comps, key=lambda n: len(self.comps[n].instructions))
+            return self.computation_cost(name)
+        return self.computation_cost(self.entry)
+
+
+def analyze_collectives(text: str) -> Dict[str, float]:
+    """Quick summary used by tests: collective kind -> modeled link bytes."""
+    cost = HloAnalyzer(text).module_cost()
+    return dict(cost.coll_by_kind)

@@ -1,0 +1,105 @@
+"""ShapeDtypeStruct stand-ins (weak-type-correct, shardable, zero
+allocation) for every (arch x shape) dry-run cell, plus the abstract
+param/optimizer/decode-state trees with their shardings attached."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeConfig
+from repro.models.model import init_decode_state, init_params
+from repro.sharding.partition import (ShardingPolicy, RuleContext,
+                                      decode_state_specs, param_specs)
+from repro.train.optimizer import OptimizerConfig, adamw_init
+
+PyTree = Any
+
+N_PATCHES = 256       # internvl2 vision stub
+
+
+def _with_shardings(abstract: PyTree, specs: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                          sharding=NamedSharding(mesh, s)),
+        abstract, specs)
+
+
+def abstract_params(cfg: ModelConfig, mesh: Mesh,
+                    policy: ShardingPolicy) -> PyTree:
+    aps = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    specs = param_specs(aps, mesh, policy)
+    return _with_shardings(aps, specs, mesh)
+
+
+def abstract_opt_state(cfg: ModelConfig, mesh: Mesh, policy: ShardingPolicy,
+                       opt_cfg: OptimizerConfig) -> PyTree:
+    aps = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    aopt = jax.eval_shape(lambda: adamw_init(aps_concrete(aps), opt_cfg))
+    pspecs = param_specs(aps, mesh, policy)
+    ospecs = {"m": pspecs, "v": pspecs, "count": P()}
+    return _with_shardings(aopt, ospecs, mesh)
+
+
+def aps_concrete(aps: PyTree) -> PyTree:
+    # eval_shape-friendly zeros matching abstract tree (never materialized).
+    return jax.tree.map(lambda a: jnp.zeros(a.shape, a.dtype), aps)
+
+
+def batch_shape(cfg: ModelConfig, shape: ShapeConfig
+                ) -> Dict[str, Tuple[Tuple[int, ...], Any]]:
+    """(shape, dtype) per batch field for train/prefill inputs."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.frontend == "audio_frames":
+        d = {"embeds": ((B, S, cfg.d_model), jnp.bfloat16)}
+        if shape.kind == "train":
+            d["labels"] = ((B, S), jnp.int32)
+        return d
+    if cfg.frontend == "vision_patches":
+        d = {"tokens": ((B, S - N_PATCHES), jnp.int32),
+             "embeds": ((B, N_PATCHES, cfg.d_model), jnp.bfloat16)}
+        if shape.kind == "train":
+            d["labels"] = ((B, S), jnp.int32)
+        return d
+    d = {"tokens": ((B, S), jnp.int32)}
+    if shape.kind == "train":
+        d["labels"] = ((B, S), jnp.int32)
+    return d
+
+
+def abstract_batch(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                   policy: ShardingPolicy) -> PyTree:
+    ctx = RuleContext(mesh, policy)
+    b_axes = ctx.fit(policy.dp_axes, shape.global_batch)
+    out = {}
+    for name, (shp, dtype) in batch_shape(cfg, shape).items():
+        spec = P(b_axes, *([None] * (len(shp) - 1)))
+        out[name] = jax.ShapeDtypeStruct(shp, dtype,
+                                         sharding=NamedSharding(mesh, spec))
+    return out
+
+
+def abstract_decode_inputs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                           policy: ShardingPolicy,
+                           seq_axes: Optional[Tuple[str, ...]] = None
+                           ) -> Dict[str, PyTree]:
+    B, S = shape.global_batch, shape.seq_len
+    if seq_axes is None:
+        # Batch 1 (long_500k): spread the KV sequence across everything.
+        seq_axes = policy.dp_axes + ("model",) if B == 1 else ("model",)
+    ast = jax.eval_shape(lambda: init_decode_state(cfg, B, S))
+    sspecs = decode_state_specs(ast, mesh, policy, B, seq_axes)
+    state = _with_shardings(ast, sspecs, mesh)
+    ctx = RuleContext(mesh, policy)
+    b_axes = ctx.fit(policy.dp_axes, B)
+    tokens = jax.ShapeDtypeStruct(
+        (B, 1), jnp.int32, sharding=NamedSharding(mesh, P(b_axes, None)))
+    pos = jax.ShapeDtypeStruct(
+        (B,), jnp.int32, sharding=NamedSharding(mesh, P(b_axes)))
+    return {"tokens": tokens, "state": state, "pos": pos}

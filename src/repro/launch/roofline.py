@@ -1,0 +1,121 @@
+"""Roofline-term derivation from the compiled dry-run artifact (§Roofline).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+(per chip). Terms, all in seconds per step, per the assignment:
+
+  compute    = HLO_FLOPs(per chip) / peak_FLOPs
+  memory     = HLO_bytes(per chip) / HBM_bw
+  collective = collective_bytes(per chip) / link_bw
+
+HLO_FLOPs / bytes / collective bytes come from the loop-aware analyzer
+(``hlo_analysis``), which is per-device for SPMD modules. MODEL_FLOPS uses
+6·N_active·D (train) or 2·N_active·D (prefill / per-token decode), so
+MODEL_FLOPS / (HLO_FLOPs × chips) exposes remat/dispatch/redundancy waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeConfig
+from repro.launch.hlo_analysis import Cost
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str = "tpu_v5e"
+    peak_flops: float = 197e12          # bf16 / chip
+    hbm_bw: float = 819e9               # B/s / chip
+    link_bw: float = 50e9               # B/s / link (ICI)
+    hbm_bytes: float = 16e9             # capacity / chip
+    loop_latency: float = 2e-6          # s per dependent loop iteration
+
+
+V5E = Hardware()
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    serial_s: float
+    seq_iters: float
+    model_flops: float
+    useful_ratio: float
+    bottleneck: str
+    hbm_per_chip: Optional[float] = None
+    coll_by_kind: Optional[Dict[str, float]] = None
+
+    @property
+    def step_time_s(self) -> float:
+        """Max-of-terms roofline step time (perfect overlap assumption);
+        the serialization floor cannot be overlapped away."""
+        return max(self.compute_s, self.memory_s, self.collective_s,
+                   self.serial_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute fraction of the roofline step: how close the step
+        is to a perfect 100%-MXU execution of the model math."""
+        if self.step_time_s <= 0:
+            return 0.0
+        ideal = self.model_flops / (self.chips * V5E.peak_flops)
+        return min(1.0, ideal / self.step_time_s)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence; attention reads the whole KV cache —
+    # counted via 2·N_active plus 2·KV flops per layer.
+    kv_layers = sum(1 for m, _ in cfg.layer_pattern if m == "attn") * \
+        cfg.n_periods
+    hd = cfg.resolved_head_dim
+    kv_flops = 4.0 * shape.seq_len * cfg.n_heads * hd * kv_layers
+    return (2.0 * n_active + kv_flops) * shape.global_batch
+
+
+def build_report(arch: str, shape_cfg: ShapeConfig, mesh_name: str,
+                 chips: int, cost: Cost, cfg: ModelConfig,
+                 hbm_per_chip: Optional[float] = None,
+                 hw: Hardware = V5E) -> RooflineReport:
+    compute = cost.flops / hw.peak_flops
+    memory = cost.bytes / hw.hbm_bw
+    coll = cost.coll_bytes / hw.link_bw
+    serial = cost.seq_iters * hw.loop_latency
+    mf = model_flops(cfg, shape_cfg)
+    useful = mf / max(cost.flops * chips, 1.0)
+    terms = {"compute": compute, "memory": memory, "collective": coll,
+             "serial": serial}
+    bottleneck = max(terms, key=terms.get)
+    return RooflineReport(
+        arch=arch, shape=shape_cfg.name, mesh=mesh_name, chips=chips,
+        flops_per_chip=cost.flops, bytes_per_chip=cost.bytes,
+        coll_bytes_per_chip=cost.coll_bytes, compute_s=compute,
+        memory_s=memory, collective_s=coll, serial_s=serial,
+        seq_iters=cost.seq_iters, model_flops=mf,
+        useful_ratio=useful, bottleneck=bottleneck,
+        hbm_per_chip=hbm_per_chip,
+        coll_by_kind=dict(cost.coll_by_kind))
+
+
+def format_row(r: RooflineReport) -> str:
+    return (f"{r.arch:<22} {r.shape:<12} {r.mesh:<10} "
+            f"C={r.compute_s:9.3e}s M={r.memory_s:9.3e}s "
+            f"X={r.collective_s:9.3e}s S={r.serial_s:9.3e}s "
+            f"dom={r.bottleneck:<10} "
+            f"useful={r.useful_ratio:6.1%} roofline={r.roofline_fraction:6.1%}")

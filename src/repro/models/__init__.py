@@ -1,0 +1,5 @@
+from repro.models.model import (decode_step, forward, init_decode_state,
+                                init_params, lm_loss)
+
+__all__ = ["decode_step", "forward", "init_decode_state", "init_params",
+           "lm_loss"]

@@ -1,0 +1,263 @@
+"""GQA attention: training/prefill (naive or blockwise-online-softmax) and
+single-token decode against a KV cache.
+
+The blockwise path is the pure-JAX flash-attention formulation (scan over KV
+blocks with running max/denominator) — O(S) memory, the form the Pallas
+kernel in ``repro.kernels.flash_attention`` implements natively on TPU. The
+implementation is selected by ``impl``: "auto" uses naive for short
+sequences (cheap HLO for CPU tests) and blockwise beyond 2048.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, apply_rope
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    q_dim, kv_dim = cfg.n_heads * hd, cfg.n_kv_heads * hd
+    ks = jax.random.split(key, 4)
+    std = 1.0 / math.sqrt(d)
+    p: Params = {
+        "wq": (jax.random.normal(ks[0], (d, q_dim)) * std).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, kv_dim)) * std).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, kv_dim)) * std).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (q_dim, d)) *
+               (1.0 / math.sqrt(q_dim))).astype(dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((q_dim,), dtype)
+        p["bk"] = jnp.zeros((kv_dim,), dtype)
+        p["bv"] = jnp.zeros((kv_dim,), dtype)
+    return p
+
+
+def _project_qkv(params: Params, x: jax.Array, cfg: ModelConfig
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    hd = cfg.resolved_head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"];  k = k + params["bk"];  v = v + params["bv"]
+    B, S = x.shape[:2]
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    return q, k, v
+
+
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """Broadcast KV heads to Q heads for GQA (no materialized repeat: rely on
+    reshape+broadcast so XLA keeps it free)."""
+    B, S, Hk, D = k.shape
+    rep = n_heads // Hk
+    k = jnp.broadcast_to(k[:, :, :, None, :], (B, S, Hk, rep, D))
+    return k.reshape(B, S, Hk * rep, D)
+
+
+def _naive_attention(q, k, v, causal: bool, q_offset: int = 0) -> jax.Array:
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / math.sqrt(D)
+    # bf16 dot + fp32 logits cast, matching the decode path bit-for-bit
+    # (teacher-forced decode == parallel forward; see §Perf C2 note).
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        qi = jnp.arange(Sq)[:, None] + q_offset
+        ki = jnp.arange(Sk)[None, :]
+        logits = jnp.where(ki <= qi, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def _blockwise_impl(q, k, v, causal: bool, block: int):
+    """Online-softmax scan over KV blocks — O(S) memory. Returns (out, lse)
+    with lse = logsumexp of the masked logits, (B, H, Sq)."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    nblk = (Sk + block - 1) // block
+    pad = nblk * block - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, nblk, block, H, D).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nblk, block, H, D).transpose(1, 0, 2, 3, 4)
+    scale = 1.0 / math.sqrt(D)
+    qi = jnp.arange(Sq)[:, None]
+
+    def body(carry, xs):
+        acc, m, denom = carry          # (B,Sq,H,D), (B,H,Sq), (B,H,Sq)
+        kblk, vblk, blk_idx = xs
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, kblk
+                            ).astype(jnp.float32) * scale
+        ki = blk_idx * block + jnp.arange(block)[None, :]
+        mask = ki <= qi if causal else (ki < Sk)
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        denom = denom * corr + p.sum(axis=-1)
+        acc = acc * corr.transpose(0, 2, 1)[..., None] + jnp.einsum(
+            "bhqk,bkhd->bqhd", p.astype(q.dtype), vblk).astype(jnp.float32)
+        return (acc, m_new, denom), None
+
+    acc0 = jnp.zeros((B, Sq, H, D), jnp.float32)
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    d0 = jnp.zeros((B, H, Sq), jnp.float32)
+    (acc, m, denom), _ = jax.lax.scan(
+        body, (acc0, m0, d0),
+        (kb, vb, jnp.arange(nblk)))
+    denom = jnp.maximum(denom, 1e-30)
+    out = acc / denom.transpose(0, 2, 1)[..., None]
+    lse = m + jnp.log(denom)
+    return out.astype(q.dtype), lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _blockwise_attention(q, k, v, causal: bool, block: int = 512):
+    """Flash attention with a custom backward (§Perf B2): naive AD of the
+    forward scan stacks every block's (Sq, block) probabilities as scan
+    residuals — O(Sq*Sk) HBM traffic per layer. The custom VJP saves only
+    (out, lse) and recomputes each block's probabilities in the backward
+    scan, restoring O(S) memory for training."""
+    return _blockwise_impl(q, k, v, causal, block)[0]
+
+
+def _blockwise_fwd(q, k, v, causal: bool, block: int):
+    out, lse = _blockwise_impl(q, k, v, causal, block)
+    return out, (q, k, v, out, lse)
+
+
+def _blockwise_bwd(causal: bool, block: int, res, dout):
+    q, k, v, out, lse = res
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    nblk = (Sk + block - 1) // block
+    pad = nblk * block - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, nblk, block, H, D).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nblk, block, H, D).transpose(1, 0, 2, 3, 4)
+    scale = 1.0 / math.sqrt(D)
+    qi = jnp.arange(Sq)[:, None]
+    doutf = dout.astype(jnp.float32)
+    # delta_i = sum_d dout_i * out_i  (flash-attention-2 backward).
+    delta = jnp.einsum("bqhd,bqhd->bhq", doutf, out.astype(jnp.float32))
+
+    def body(dq_acc, xs):
+        kblk, vblk, blk_idx = xs
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, kblk
+                            ).astype(jnp.float32) * scale
+        ki = blk_idx * block + jnp.arange(block)[None, :]
+        mask = ki <= qi if causal else (ki < Sk)
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+        p = jnp.exp(logits - lse[..., None])          # (B,H,Sq,block)
+        dp = jnp.einsum("bqhd,bkhd->bhqk", doutf,
+                        vblk.astype(jnp.float32))
+        ds = p * (dp - delta[..., None]) * scale
+        dv = jnp.einsum("bhqk,bqhd->bkhd", p, doutf)
+        dk = jnp.einsum("bhqk,bqhd->bkhd", ds, q.astype(jnp.float32))
+        dq_acc = dq_acc + jnp.einsum("bhqk,bkhd->bqhd", ds,
+                                     kblk.astype(jnp.float32))
+        return dq_acc, (dk, dv)
+
+    dq0 = jnp.zeros((B, Sq, H, D), jnp.float32)
+    dq, (dk_b, dv_b) = jax.lax.scan(body, dq0,
+                                    (kb, vb, jnp.arange(nblk)))
+    dk = dk_b.transpose(1, 0, 2, 3, 4).reshape(B, nblk * block, H, D)
+    dv = dv_b.transpose(1, 0, 2, 3, 4).reshape(B, nblk * block, H, D)
+    return (dq.astype(q.dtype), dk[:, :Sk].astype(k.dtype),
+            dv[:, :Sk].astype(v.dtype))
+
+
+_blockwise_attention.defvjp(_blockwise_fwd, _blockwise_bwd)
+
+
+def attention_forward(params: Params, x: jax.Array, cfg: ModelConfig,
+                      positions: jax.Array, causal: bool,
+                      impl: str = "auto") -> jax.Array:
+    """Full-sequence attention (training / prefill)."""
+    q, k, v = _project_qkv(params, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    k = _expand_kv(k, cfg.n_heads)
+    v = _expand_kv(v, cfg.n_heads)
+    S = x.shape[1]
+    if impl == "auto":
+        impl = "naive" if S <= 2048 else "blockwise"
+    if impl == "naive":
+        out = _naive_attention(q, k, v, causal)
+    elif impl == "blockwise":
+        out = _blockwise_attention(q, k, v, causal)
+    else:
+        raise ValueError(f"unknown attention impl {impl!r}")
+    B, S_, H, D = out.shape
+    return out.reshape(B, S_, H * D) @ params["wo"]
+
+
+def decode_attention(params: Params, x: jax.Array, cfg: ModelConfig,
+                     kv_cache: Dict[str, jax.Array], pos: jax.Array
+                     ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode. x: (B, 1, d). kv_cache: {"k","v"}: (B, S_max, Hk, Dh),
+    pos: (B,) current write index. Returns output and the updated cache."""
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    q, k_new, v_new = _project_qkv(params, x, cfg)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k_new = apply_rope(k_new, pos[:, None], cfg.rope_theta)
+    # Write the new KV at per-sequence positions.
+    kv_update = getattr(cfg, "kv_update", "scatter")
+    if kv_update == "onehot":
+        # Pre-hillclimb baseline (§Perf C1): the one-hot blend reads and
+        # rewrites the ENTIRE cache every token.
+        k_cache = _scatter_kv(kv_cache["k"], k_new, pos)
+        v_cache = _scatter_kv(kv_cache["v"], v_new, pos)
+    else:
+        # Indexed scatter touches one (Hk, Dh) row per sequence; with the
+        # cache buffer donated it is an in-place update.
+        b_idx = jnp.arange(B)
+        k_cache = kv_cache["k"].at[b_idx, pos].set(
+            k_new[:, 0].astype(kv_cache["k"].dtype))
+        v_cache = kv_cache["v"].at[b_idx, pos].set(
+            v_new[:, 0].astype(kv_cache["v"].dtype))
+    S_max = k_cache.shape[1]
+    k = _expand_kv(k_cache, cfg.n_heads)
+    v = _expand_kv(v_cache, cfg.n_heads)
+    scale = 1.0 / math.sqrt(hd)
+    # NOTE (§Perf C2, refuted): fp32 accumulation via preferred_element_type
+    # looked like a free win, but XLA's CPU backend materializes fp32 copies
+    # of the whole KV stripe around such dots (+47% memory term measured);
+    # the bf16 dot + fp32 logits cast below avoids the copies on CPU and is
+    # what the TPU MXU executes natively anyway.
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    valid = jnp.arange(S_max)[None, :] <= pos[:, None]           # (B, S_max)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    out = out.reshape(B, 1, cfg.n_heads * hd) @ params["wo"]
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def _scatter_kv(cache: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
+    """cache: (B, S, Hk, D); new: (B, 1, Hk, D); pos: (B,)."""
+    oh = jax.nn.one_hot(pos, cache.shape[1], dtype=cache.dtype)  # (B, S)
+    return cache * (1 - oh)[..., None, None] + oh[..., None, None] * new
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    hd = cfg.resolved_head_dim
+    shape = (batch, max_len, cfg.n_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

@@ -1,0 +1,118 @@
+"""Shared layers: norms (incl. OLMo's non-parametric LN), RoPE, MLP variants.
+
+Parameters are plain pytrees (dicts of jnp arrays). Every init function takes
+an ``jax.random`` key and returns the param dict; every apply function takes
+(params, inputs). Compute dtype is bf16 by default with fp32 accumulation for
+reductions (norms, softmax) — the TPU-native policy.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jax.Array]
+
+
+def default_dtype() -> jnp.dtype:
+    return jnp.bfloat16
+
+
+# ------------------------------------------------------------------ norms --
+
+def init_norm(key, d: int, kind: str) -> Params:
+    del key
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)}
+    if kind == "nonparam_ln":       # OLMo: LN without learnable params
+        return {}
+    raise ValueError(f"unknown norm {kind!r}")
+
+
+def apply_norm(params: Params, x: jax.Array, kind: str,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    else:
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mean) * jax.lax.rsqrt(var + eps)
+        if kind == "layernorm":
+            out = out * params["scale"] + params["bias"]
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------- RoPE --
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                    # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(angles)[..., None, :]                    # (..., S, 1, Dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------------- MLP --
+
+def init_mlp(key, d: int, d_ff: int, mlp_type: str,
+             dtype=jnp.bfloat16) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    std_in = 1.0 / math.sqrt(d)
+    std_out = 1.0 / math.sqrt(d_ff)
+    p: Params = {
+        "w_in": (jax.random.normal(k1, (d, d_ff)) * std_in).astype(dtype),
+        "w_out": (jax.random.normal(k2, (d_ff, d)) * std_out).astype(dtype),
+    }
+    if mlp_type == "swiglu":
+        p["w_gate"] = (jax.random.normal(k3, (d, d_ff)) * std_in).astype(dtype)
+    return p
+
+
+def apply_mlp(params: Params, x: jax.Array, mlp_type: str) -> jax.Array:
+    h = x @ params["w_in"]
+    if mlp_type == "swiglu":
+        g = x @ params["w_gate"]
+        h = jax.nn.silu(g) * h
+    elif mlp_type == "relu2":       # Nemotron-4: squared ReLU
+        h = jnp.square(jax.nn.relu(h))
+    elif mlp_type == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(f"unknown mlp {mlp_type!r}")
+    return h @ params["w_out"]
+
+
+# -------------------------------------------------------------- embedding --
+
+def init_embedding(key, vocab: int, d: int, dtype=jnp.bfloat16) -> Params:
+    return {"table": (jax.random.normal(key, (vocab, d)) *
+                      (1.0 / math.sqrt(d))).astype(dtype)}
+
+
+def embed(params: Params, tokens: jax.Array) -> jax.Array:
+    return params["table"][tokens]
+
+
+def unembed(table: jax.Array, x: jax.Array) -> jax.Array:
+    """bf16 matmul with fp32 accumulation -> fp32 logits, without ever
+    materializing an fp32 copy of the (vocab, d) table."""
+    return jax.lax.dot_general(
+        x, table, (((x.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)

@@ -1,0 +1,261 @@
+"""Model assembly: scan-over-periods block stacks for all ten architectures.
+
+``init_params`` builds a pytree whose block leaves have a leading
+``n_periods`` axis; ``forward`` (train/prefill) and ``decode_step`` (serving)
+iterate periods with ``jax.lax.scan`` so HLO size and compile time are
+O(period), independent of depth. Heterogeneous stacks (Jamba's 1:7
+attention:Mamba interleave, xLSTM's mLSTM/sLSTM mix, MoE-every-2) are
+expressed by the per-period ``layer_pattern``.
+
+Decode state is a pytree mirroring the pattern: attention blocks carry a
+(P, B, S_max, Hk, Dh) KV cache; Mamba/xLSTM blocks carry their O(1)
+recurrent states stacked over periods.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.layers import (Params, apply_mlp, apply_norm, embed,
+                                 init_embedding, init_mlp, init_norm,
+                                 unembed)
+
+PyTree = Any
+
+
+# ------------------------------------------------------------------- init --
+
+def _init_block(key, cfg: ModelConfig, mixer: str, mlp: str,
+                dtype=jnp.bfloat16) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: Params = {"norm1": init_norm(k3, cfg.d_model, cfg.norm_type)}
+    if mixer == "attn":
+        p["mixer"] = attn.init_attention(k1, cfg, dtype)
+    elif mixer == "mamba":
+        p["mixer"] = ssm.init_mamba(k1, cfg, dtype)
+    elif mixer == "mlstm":
+        p["mixer"] = ssm.init_mlstm(k1, cfg, dtype)
+    elif mixer == "slstm":
+        p["mixer"] = ssm.init_slstm(k1, cfg, dtype)
+    if mlp == "dense":
+        p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp_type, dtype)
+        p["norm2"] = init_norm(k4, cfg.d_model, cfg.norm_type)
+    elif mlp == "moe":
+        p["mlp"] = moe_mod.init_moe(k2, cfg, dtype)
+        p["norm2"] = init_norm(k4, cfg.d_model, cfg.norm_type)
+    return p
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.bfloat16) -> Params:
+    keys = jax.random.split(key, cfg.period + 3)
+    blocks: Params = {}
+    for i, (mixer, mlp) in enumerate(cfg.layer_pattern):
+        pkeys = jax.random.split(keys[i], cfg.n_periods)
+        blocks[f"b{i}"] = jax.vmap(
+            lambda k: _init_block(k, cfg, mixer, mlp, dtype))(pkeys)
+    params: Params = {"blocks": blocks,
+                      "final_norm": init_norm(keys[-3], cfg.d_model,
+                                              cfg.norm_type)}
+    if cfg.frontend != "audio_frames":
+        params["embed"] = init_embedding(keys[-2], cfg.vocab_size,
+                                         cfg.d_model, dtype)
+    if cfg.encoder_only or cfg.frontend == "audio_frames":
+        params["head"] = init_embedding(keys[-1], cfg.vocab_size,
+                                        cfg.d_model, dtype)
+    elif not cfg.tie_embeddings:
+        params["unembed"] = init_embedding(keys[-1], cfg.vocab_size,
+                                           cfg.d_model, dtype)
+    return params
+
+
+# ---------------------------------------------------------------- forward --
+
+def _apply_block_seq(bp: Params, h: jax.Array, cfg: ModelConfig,
+                     mixer: str, mlp: str, positions: jax.Array,
+                     causal: bool, attention_impl: str
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """One block over a full sequence. Returns (h, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    hn = apply_norm(bp["norm1"], h, cfg.norm_type)
+    if mixer == "attn":
+        mixed = attn.attention_forward(bp["mixer"], hn, cfg, positions,
+                                       causal, attention_impl)
+    elif mixer == "mamba":
+        mixed, _ = ssm.mamba_forward(bp["mixer"], hn, cfg)
+    elif mixer == "mlstm":
+        mixed, _ = ssm.mlstm_forward(bp["mixer"], hn, cfg,
+                                     impl=cfg.mlstm_impl)
+    elif mixer == "slstm":
+        mixed, _ = ssm.slstm_forward(bp["mixer"], hn, cfg)
+    else:
+        raise ValueError(mixer)
+    h = h + mixed
+    if mlp != "none":
+        hn = apply_norm(bp["norm2"], h, cfg.norm_type)
+        if mlp == "dense":
+            h = h + apply_mlp(bp["mlp"], hn, cfg.mlp_type)
+        else:
+            y, aux = moe_mod.moe_forward(bp["mlp"], hn, cfg)
+            h = h + y
+    return h, aux
+
+
+def forward(params: Params, cfg: ModelConfig, *,
+            tokens: Optional[jax.Array] = None,
+            embeds: Optional[jax.Array] = None,
+            attention_impl: str = "auto",
+            remat: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward. Returns (logits, aux_loss).
+
+    ``tokens``: (B, S) int32 (LM / VLM text); ``embeds``: (B, S_e, d)
+    precomputed frontend embeddings (audio frames / vision patches). For the
+    VLM both are given and the patch embeddings are prepended.
+    """
+    parts = []
+    if embeds is not None:
+        parts.append(embeds.astype(jnp.bfloat16))
+    if tokens is not None:
+        parts.append(embed(params["embed"], tokens))
+    h = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    B, S, _ = h.shape
+    positions = jnp.arange(S)[None, :]
+    causal = not cfg.encoder_only
+
+    def period_body(carry, period_params):
+        hh, aux = carry
+        for i, (mixer, mlp) in enumerate(cfg.layer_pattern):
+            if cfg.seq_parallel:
+                hh = jax.lax.with_sharding_constraint(
+                    hh, jax.sharding.PartitionSpec(None, "model", None))
+            hh, a = _apply_block_seq(period_params[f"b{i}"], hh, cfg, mixer,
+                                     mlp, positions, causal, attention_impl)
+            aux = aux + a
+        return (hh, aux), None
+
+    body = period_body
+    if remat:
+        body = jax.checkpoint(
+            period_body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    (h, aux), _ = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                               params["blocks"])
+    h = apply_norm(params["final_norm"], h, cfg.norm_type)
+    if cfg.encoder_only or cfg.frontend == "audio_frames":
+        logits = unembed(params["head"]["table"], h)
+    elif cfg.tie_embeddings:
+        logits = unembed(params["embed"]["table"], h)
+    else:
+        logits = unembed(params["unembed"]["table"], h)
+    return logits, aux
+
+
+# ----------------------------------------------------------------- decode --
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int) -> PyTree:
+    """Stacked (over periods) per-pattern-position decode states."""
+
+    def one(i: int, mixer: str) -> PyTree:
+        if mixer == "attn":
+            return attn.init_kv_cache(cfg, batch, max_len)
+        if mixer == "mamba":
+            return ssm.init_mamba_state(cfg, batch)
+        if mixer == "mlstm":
+            C, n, m = ssm.init_mlstm_state(cfg, batch)
+            return {"C": C, "n": n, "m": m}
+        if mixer == "slstm":
+            c, n, m, h = ssm.init_slstm_state(cfg, batch)
+            return {"c": c, "n": n, "m": m, "h": h}
+        raise ValueError(mixer)
+
+    state: Dict[str, PyTree] = {}
+    for i, (mixer, _) in enumerate(cfg.layer_pattern):
+        st = one(i, mixer)
+        state[f"b{i}"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_periods,) + x.shape).copy(),
+            st)
+    return state
+
+
+def _apply_block_step(bp: Params, h: jax.Array, st: PyTree, cfg: ModelConfig,
+                      mixer: str, mlp: str, pos: jax.Array
+                      ) -> Tuple[jax.Array, PyTree]:
+    hn = apply_norm(bp["norm1"], h, cfg.norm_type)
+    if mixer == "attn":
+        mixed, st = attn.decode_attention(bp["mixer"], hn, cfg, st, pos)
+    elif mixer == "mamba":
+        mixed, st = ssm.mamba_step(bp["mixer"], hn, st, cfg)
+    elif mixer == "mlstm":
+        mixed, tup = ssm.mlstm_step(bp["mixer"], hn,
+                                    (st["C"], st["n"], st["m"]), cfg)
+        st = {"C": tup[0], "n": tup[1], "m": tup[2]}
+    elif mixer == "slstm":
+        mixed, tup = ssm.slstm_step(bp["mixer"], hn,
+                                    (st["c"], st["n"], st["m"], st["h"]), cfg)
+        st = {"c": tup[0], "n": tup[1], "m": tup[2], "h": tup[3]}
+    else:
+        raise ValueError(mixer)
+    h = h + mixed
+    if mlp != "none":
+        hn = apply_norm(bp["norm2"], h, cfg.norm_type)
+        if mlp == "dense":
+            h = h + apply_mlp(bp["mlp"], hn, cfg.mlp_type)
+        else:
+            y, _ = moe_mod.moe_forward(bp["mlp"], hn, cfg)
+            h = h + y
+    return h, st
+
+
+def decode_step(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                state: PyTree, pos: jax.Array
+                ) -> Tuple[jax.Array, PyTree]:
+    """One decode step. tokens: (B, 1) int32; pos: (B,) write positions.
+    Returns (logits (B, 1, V), updated state)."""
+    if cfg.encoder_only:
+        raise ValueError(f"{cfg.name} is encoder-only: no decode step")
+    h = embed(params["embed"], tokens)
+
+    def period_body(carry, xs):
+        hh = carry
+        period_params, st = xs
+        new_st = {}
+        for i, (mixer, mlp) in enumerate(cfg.layer_pattern):
+            hh, new_st[f"b{i}"] = _apply_block_step(
+                period_params[f"b{i}"], hh, st[f"b{i}"], cfg, mixer, mlp, pos)
+        return hh, new_st
+
+    h, new_state = jax.lax.scan(period_body, h, (params["blocks"], state))
+    h = apply_norm(params["final_norm"], h, cfg.norm_type)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"]["table"], h)
+    else:
+        logits = unembed(params["unembed"]["table"], h)
+    return logits, new_state
+
+
+# ------------------------------------------------------------------ losses --
+
+def lm_loss(logits: jax.Array, labels: jax.Array,
+            mask: Optional[jax.Array] = None) -> jax.Array:
+    """Token-mean cross entropy; labels < 0 are ignored.
+
+    Written as logsumexp - <onehot, logits> so a vocab-sharded logits tensor
+    stays sharded: the label pick is a local partial sum + tiny all-reduce,
+    never a cross-shard gather (take_along_axis would all-gather the full
+    (B, S, V) tensor)."""
+    valid = (labels >= 0) if mask is None else mask
+    labels = jnp.maximum(labels, 0)
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)          # (B, S)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1],
+                            dtype=jnp.bfloat16)
+    picked = jnp.einsum("...v,...v->...", logits,
+                        onehot.astype(jnp.float32))
+    ll = (picked - lse) * valid
+    return -(ll.sum() / jnp.maximum(valid.sum(), 1))

@@ -1,0 +1,136 @@
+"""Mixture-of-Experts MLP: top-k routing with capacity-based dispatch
+(GShard/Switch-style einsum dispatch — the TPU-native formulation), shared
+experts (DeepSeekMoE), and an auxiliary load-balance loss.
+
+Experts live on the leading axis of the weight stacks, which the sharding
+rules map to the ``model`` mesh axis (expert parallelism). The dispatch and
+combine einsums then lower to all-to-alls under pjit.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    assert cfg.moe is not None
+    d = cfg.d_model
+    de = cfg.d_expert_resolved
+    E = cfg.moe.n_experts
+    S = cfg.moe.n_shared
+    ks = jax.random.split(key, 7)
+    std_in = 1.0 / math.sqrt(d)
+    std_out = 1.0 / math.sqrt(de)
+    mult_gate = cfg.mlp_type == "swiglu"
+    p: Params = {
+        "router": (jax.random.normal(ks[0], (d, E)) * std_in).astype(
+            jnp.float32),
+        "w_in": (jax.random.normal(ks[1], (E, d, de)) * std_in).astype(dtype),
+        "w_out": (jax.random.normal(ks[2], (E, de, d)) *
+                  std_out).astype(dtype),
+    }
+    if mult_gate:
+        p["w_gate"] = (jax.random.normal(ks[3], (E, d, de)) *
+                       std_in).astype(dtype)
+    if S:
+        p["sh_in"] = (jax.random.normal(ks[4], (d, S * de)) *
+                      std_in).astype(dtype)
+        p["sh_out"] = (jax.random.normal(ks[5], (S * de, d)) *
+                       std_out).astype(dtype)
+        if mult_gate:
+            p["sh_gate"] = (jax.random.normal(ks[6], (d, S * de)) *
+                            std_in).astype(dtype)
+    return p
+
+
+def _activate(h: jax.Array, g, mlp_type: str) -> jax.Array:
+    if mlp_type == "swiglu":
+        return jax.nn.silu(g) * h
+    if mlp_type == "relu2":
+        return jnp.square(jax.nn.relu(h))
+    return jax.nn.gelu(h)
+
+
+def moe_forward(params: Params, x: jax.Array, cfg: ModelConfig
+                ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y, aux_loss). Capacity-based top-k dispatch."""
+    mc = cfg.moe
+    assert mc is not None
+    B, S, d = x.shape
+    T = B * S
+    E, K = mc.n_experts, mc.top_k
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32) @ params["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)               # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Aux load-balance loss (Switch): E * sum_e f_e * p_e.
+    me = jnp.mean(probs, axis=0)
+    one_hot_top1 = jax.nn.one_hot(expert_idx[:, 0], E)
+    ce = jnp.mean(one_hot_top1, axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    capacity = max(1, int(mc.capacity_factor * K * T / E))
+    # Position of each (token, k) slot within its expert queue.
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)       # (T, K, E)
+    flat = onehot.reshape(T * K, E)
+    pos_in_expert = (jnp.cumsum(flat, axis=0) - flat).reshape(T, K, E)
+    pos = jnp.sum(pos_in_expert * onehot, axis=-1)                # (T, K)
+    keep = pos < capacity
+    gate_vals = gate_vals * keep
+
+    dispatch = getattr(cfg, "moe_dispatch", "sort")
+    if dispatch == "einsum":
+        # GShard-style one-hot einsum dispatch (pre-hillclimb baseline,
+        # EXPERIMENTS.md §Perf B1): materializes (T, E, C) tensors — the
+        # dispatch einsums cost O(T*E*C*d), dwarfing the expert matmuls for
+        # fine-grained MoEs.
+        pos_oh = jax.nn.one_hot(jnp.where(keep, pos, capacity), capacity,
+                                dtype=x.dtype)                    # (T, K, C)
+        disp = jnp.einsum("tke,tkc->tec", onehot.astype(x.dtype), pos_oh)
+        comb = jnp.einsum("tke,tkc,tk->tec", onehot.astype(jnp.float32),
+                          pos_oh.astype(jnp.float32),
+                          gate_vals.astype(jnp.float32)).astype(x.dtype)
+        xe = jnp.einsum("td,tec->ecd", xt, disp)                  # (E, C, d)
+    else:
+        # Scatter/gather dispatch (§Perf B1): each (token, k) routes to a
+        # unique slot e*C + pos; dropped tokens land in an overflow slot.
+        # O(T*K*d) data movement instead of O(T*E*C*d) dispatch FLOPs.
+        slot = jnp.where(keep, expert_idx * capacity + pos,
+                         E * capacity)                            # (T, K)
+        xe_flat = jnp.zeros((E * capacity + 1, d), x.dtype)
+        for kk in range(K):
+            xe_flat = xe_flat.at[slot[:, kk]].set(xt)
+        xe = xe_flat[:E * capacity].reshape(E, capacity, d)
+
+    h = jnp.einsum("ecd,edf->ecf", xe, params["w_in"])
+    g = jnp.einsum("ecd,edf->ecf", xe, params["w_gate"]) \
+        if "w_gate" in params else None
+    h = _activate(h, g, cfg.mlp_type)
+    ye = jnp.einsum("ecf,efd->ecd", h, params["w_out"])           # (E, C, d)
+
+    if dispatch == "einsum":
+        y = jnp.einsum("ecd,tec->td", ye, comb)
+    else:
+        ye_flat = jnp.concatenate(
+            [ye.reshape(E * capacity, d), jnp.zeros((1, d), ye.dtype)])
+        y = jnp.zeros((T, d), jnp.float32)
+        for kk in range(K):
+            y = y + ye_flat[slot[:, kk]].astype(jnp.float32) * \
+                gate_vals[:, kk].astype(jnp.float32)[:, None]
+        y = y.astype(x.dtype)
+
+    if "sh_in" in params:                                          # shared
+        hs = xt @ params["sh_in"]
+        gs = xt @ params["sh_gate"] if "sh_gate" in params else None
+        y = y + _activate(hs, gs, cfg.mlp_type) @ params["sh_out"]
+    return y.reshape(B, S, d), aux

@@ -1,0 +1,403 @@
+"""Sequence-mixing SSM blocks: Mamba (Jamba's 7-of-8 layers) and xLSTM's
+mLSTM / sLSTM.
+
+Mamba runs chunkwise: ``lax.scan`` over sequence chunks with an associative
+scan *inside* each chunk — O(S·d_state) compute, O(chunk) live memory, and an
+O(1) recurrent state for decode. This is the TPU-native layout (the chunk is
+the VMEM tile). mLSTM/sLSTM use the stabilized sequential recurrence
+(``lax.scan`` over time); the chunkwise-parallel mLSTM reformulation is the
+documented §Perf optimization path (see EXPERIMENTS.md).
+
+All blocks expose:  init_*(key, cfg) -> params
+                    *_forward(params, x, cfg) -> (y, final_state)
+                    *_step(params, x_t, state, cfg) -> (y_t, state)
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params
+
+
+# ------------------------------------------------------------------ Mamba --
+
+def _mamba_dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    mc = cfg.mamba
+    assert mc is not None
+    di = mc.expand * cfg.d_model
+    dt_rank = max(1, math.ceil(cfg.d_model / 16))
+    return di, mc.d_state, mc.d_conv, dt_rank
+
+
+def init_mamba(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    d = cfg.d_model
+    di, ds, dc, dtr = _mamba_dims(cfg)
+    ks = jax.random.split(key, 7)
+    std = 1.0 / math.sqrt(d)
+    return {
+        "w_in": (jax.random.normal(ks[0], (d, 2 * di)) * std).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (dc, di)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "w_dt_down": (jax.random.normal(ks[2], (di, dtr)) /
+                      math.sqrt(di)).astype(dtype),
+        "w_dt_up": (jax.random.normal(ks[3], (dtr, di)) /
+                    math.sqrt(dtr)).astype(dtype),
+        "dt_bias": jnp.full((di,), -4.6, jnp.float32),   # softplus^-1(~0.01)
+        "w_bc": (jax.random.normal(ks[4], (di, 2 * ds)) /
+                 math.sqrt(di)).astype(dtype),
+        # A negative-real, channel x state (S4D-lin init).
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32),
+                                  (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "w_out": (jax.random.normal(ks[5], (di, d)) /
+                  math.sqrt(di)).astype(dtype),
+    }
+
+
+def _mamba_gates(params: Params, xc: jax.Array):
+    """xc: (..., di) post-conv activations -> (dt, B, C) selective params."""
+    dt = jax.nn.softplus(
+        (xc @ params["w_dt_down"] @ params["w_dt_up"]).astype(jnp.float32)
+        + params["dt_bias"])                                   # (..., di)
+    bc = (xc @ params["w_bc"]).astype(jnp.float32)
+    ds = bc.shape[-1] // 2
+    return dt, bc[..., :ds], bc[..., ds:]
+
+
+def _causal_conv(params: Params, x: jax.Array) -> jax.Array:
+    """Depthwise causal conv over sequence (fp32 accumulate, matching the
+    decode-step path bit-for-bit). x: (B, S, di)."""
+    dc = params["conv_w"].shape[0]
+    w = params["conv_w"].astype(jnp.float32)
+    pad = jnp.pad(x.astype(jnp.float32), ((0, 0), (dc - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(dc))
+    return jax.nn.silu(out + params["conv_b"].astype(jnp.float32)
+                       ).astype(x.dtype)
+
+
+def mamba_forward(params: Params, x: jax.Array, cfg: ModelConfig,
+                  chunk: int = 128) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, S, d) -> (y, {"h": (B, di, ds), "conv": (B, dc-1, di)})."""
+    B, S, d = x.shape
+    di, ds, dc, _ = _mamba_dims(cfg)
+    xz = x @ params["w_in"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xc = _causal_conv(params, xi)                       # (B, S, di)
+    dt, Bsel, Csel = _mamba_gates(params, xc)
+    A = -jnp.exp(params["A_log"])                       # (di, ds)
+    nchunks = (S + chunk - 1) // chunk
+    pad = nchunks * chunk - S
+    if pad:
+        xc_p = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+        dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_p = jnp.pad(Bsel, ((0, 0), (0, pad), (0, 0)))
+        C_p = jnp.pad(Csel, ((0, 0), (0, pad), (0, 0)))
+    else:
+        xc_p, dt_p, B_p, C_p = xc, dt, Bsel, Csel
+    csh = (nchunks, B, chunk)
+    xcs = xc_p.reshape(B, nchunks, chunk, di).transpose(1, 0, 2, 3)
+    dts = dt_p.reshape(B, nchunks, chunk, di).transpose(1, 0, 2, 3)
+    Bs = B_p.reshape(B, nchunks, chunk, ds).transpose(1, 0, 2, 3)
+    Cs = C_p.reshape(B, nchunks, chunk, ds).transpose(1, 0, 2, 3)
+
+    def chunk_body(h0, xs):
+        xcc, dtc, Bc, Cc = xs                 # (B, Ck, di) / (B, Ck, ds)
+        # per-step decay and input: a,b: (B, Ck, di, ds)
+        a = jnp.exp(dtc[..., None] * A[None, None])
+        b = (dtc * xcc.astype(jnp.float32))[..., None] * Bc[:, :, None, :]
+
+        def combine(left, right):
+            a1, b1 = left
+            a2, b2 = right
+            return a1 * a2, a2 * b1 + b2
+
+        a_cum, b_cum = jax.lax.associative_scan(combine, (a, b), axis=1)
+        h_t = a_cum * h0[:, None] + b_cum     # (B, Ck, di, ds)
+        y = jnp.einsum("bkis,bks->bki", h_t, Cc)
+        y = y + params["D"][None, None] * xcc.astype(jnp.float32)
+        return h_t[:, -1], y
+
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    h_final, ys = jax.lax.scan(chunk_body, h0, (xcs, dts, Bs, Cs))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, nchunks * chunk, di)[:, :S]
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ params["w_out"]
+    conv_state = jnp.pad(xi, ((0, 0), (dc - 1, 0), (0, 0)))[:, S:S + dc - 1]
+    return out, {"h": h_final, "conv": conv_state}
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:
+    di, ds, dc, _ = _mamba_dims(cfg)
+    return {"h": jnp.zeros((batch, di, ds), jnp.float32),
+            "conv": jnp.zeros((batch, dc - 1, di), jnp.bfloat16)}
+
+
+def mamba_step(params: Params, x_t: jax.Array, state: Dict[str, jax.Array],
+               cfg: ModelConfig) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x_t: (B, 1, d) single-token decode."""
+    B = x_t.shape[0]
+    di, ds, dc, _ = _mamba_dims(cfg)
+    xz = x_t[:, 0] @ params["w_in"]
+    xi, z = jnp.split(xz, 2, axis=-1)                   # (B, di)
+    window = jnp.concatenate([state["conv"],
+                              xi[:, None].astype(state["conv"].dtype)], axis=1)
+    xc = jnp.einsum("bci,ci->bi", window.astype(jnp.float32),
+                    params["conv_w"].astype(jnp.float32))
+    xc = jax.nn.silu(xc + params["conv_b"].astype(jnp.float32)).astype(x_t.dtype)
+    dt, Bsel, Csel = _mamba_gates(params, xc)           # (B, di), (B, ds)
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt[..., None] * A[None])                # (B, di, ds)
+    b = (dt * xc.astype(jnp.float32))[..., None] * Bsel[:, None, :]
+    h = a * state["h"] + b
+    y = jnp.einsum("bis,bs->bi", h, Csel) + params["D"][None] * \
+        xc.astype(jnp.float32)
+    y = y.astype(x_t.dtype) * jax.nn.silu(z)
+    out = (y @ params["w_out"])[:, None]
+    return out, {"h": h, "conv": window[:, 1:]}
+
+
+# ------------------------------------------------------------------ mLSTM --
+
+def _xlstm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    dp = int(cfg.xlstm_proj_factor * cfg.d_model)
+    H = cfg.n_heads
+    dp -= dp % H
+    return dp, H, dp // H
+
+
+def init_mlstm(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    d = cfg.d_model
+    dp, H, dh = _xlstm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    std = 1.0 / math.sqrt(d)
+    stdp = 1.0 / math.sqrt(dp)
+    return {
+        "w_up": (jax.random.normal(ks[0], (d, 2 * dp)) * std).astype(dtype),
+        "wq": (jax.random.normal(ks[1], (dp, dp)) * stdp).astype(dtype),
+        "wk": (jax.random.normal(ks[2], (dp, dp)) * stdp).astype(dtype),
+        "wv": (jax.random.normal(ks[3], (dp, dp)) * stdp).astype(dtype),
+        "w_if": (jax.random.normal(ks[4], (dp, 2 * H)) * stdp).astype(dtype),
+        "if_bias": jnp.concatenate([jnp.full((H,), -3.0),
+                                    jnp.full((H,), 3.0)]).astype(jnp.float32),
+        "w_down": (jax.random.normal(ks[5], (dp, d)) * stdp).astype(dtype),
+    }
+
+
+def _mlstm_qkvg(params: Params, xin: jax.Array, H: int, dh: int):
+    q = (xin @ params["wq"]).reshape(*xin.shape[:-1], H, dh)
+    k = (xin @ params["wk"]).reshape(*xin.shape[:-1], H, dh) / math.sqrt(dh)
+    v = (xin @ params["wv"]).reshape(*xin.shape[:-1], H, dh)
+    gates = (xin @ params["w_if"]).astype(jnp.float32) + params["if_bias"]
+    log_i = gates[..., :H]                       # input gate pre-act (log)
+    log_f = -jax.nn.softplus(-gates[..., H:])    # log sigmoid(f)
+    return q, k, v, log_i, log_f
+
+
+def _mlstm_recurrence(q, k, v, log_i, log_f, state):
+    """Stabilized mLSTM scan over time. q/k/v: (B,S,H,dh); gates: (B,S,H).
+    state: (C, n, m) with C: (B,H,dh,dh), n: (B,H,dh), m: (B,H)."""
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, li, lf = xs                  # (B,H,dh) x3, (B,H) x2
+        m_new = jnp.maximum(lf + m, li)
+        i_ = jnp.exp(li - m_new)
+        f_ = jnp.exp(lf + m - m_new)
+        C = f_[..., None, None] * C + i_[..., None, None] * \
+            (kt[..., :, None] * vt[..., None, :]).astype(jnp.float32)
+        n = f_[..., None] * n + i_[..., None] * kt.astype(jnp.float32)
+        qf = qt.astype(jnp.float32)
+        num = jnp.einsum("bhd,bhde->bhe", qf, C)
+        den = jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n))
+        h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        return (C, n, m_new), h
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (q, k, v)) + \
+        tuple(a.transpose(1, 0, 2) for a in (log_i, log_f))
+    state, hs = jax.lax.scan(step, state, xs)
+    return hs.transpose(1, 0, 2, 3), state       # (B,S,H,dh)
+
+
+def _mlstm_chunkwise(q, k, v, log_i, log_f, state, chunk: int = 64):
+    """Chunkwise-parallel stabilized mLSTM (§Perf iteration A1).
+
+    Within a chunk of length L the recurrence unrolls to an attention-like
+    form: with a_t = cumsum(log_f), b_t = log_i - a_t, and running max m,
+    the decay matrix D[t, tau] = exp(a_t + b_tau - m_t) for tau <= t gives
+
+        h_num = exp(a + m0 - m) (q @ C0) + (D * (q k^T)) v
+        qn    = exp(a + m0 - m) (q . n0) + rowsum(D * (q k^T))
+
+    — MXU matmuls instead of T sequential (B,H,dh,dh) state read/writes; the
+    (C, n, m) state crosses chunk boundaries only. Exact (same stabilizer)
+    w.r.t. the sequential form up to fp32 rounding."""
+    B, S, H, dh = q.shape
+    nchunks = (S + chunk - 1) // chunk
+    pad = nchunks * chunk - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e30)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+
+    def to_chunks(x, feat):
+        return x.reshape(B, nchunks, chunk, *feat).transpose(
+            1, 0, *range(2, 3 + len(feat)))
+
+    qs = to_chunks(q, (H, dh));  ks = to_chunks(k, (H, dh))
+    vs = to_chunks(v, (H, dh))
+    lis = to_chunks(log_i, (H,));  lfs = to_chunks(log_f, (H,))
+
+    def body(carry, xs):
+        C0, n0, m0 = carry                      # (B,H,dh,dh),(B,H,dh),(B,H)
+        qc, kc, vc, lic, lfc = xs               # (B,L,H,dh) / (B,L,H)
+        a = jnp.cumsum(lfc.astype(jnp.float32), axis=1)       # (B,L,H)
+        b = lic.astype(jnp.float32) - a
+        # Running stabilizer: m_t = max(a_t + m0, a_t + cummax_tau<=t b_tau).
+        bmax = jax.lax.cummax(b, axis=1)
+        m = a + jnp.maximum(m0[:, None], bmax)                # (B,L,H)
+        qf = qc.astype(jnp.float32)
+        kf = kc.astype(jnp.float32)
+        vf = vc.astype(jnp.float32)
+        s = jnp.einsum("bthd,bshd->bhts", qf, kf)             # (B,H,L,L)
+        logD = (a.transpose(0, 2, 1)[:, :, :, None]
+                + b.transpose(0, 2, 1)[:, :, None, :]
+                - m.transpose(0, 2, 1)[:, :, :, None])
+        tri = jnp.tril(jnp.ones((s.shape[-2], s.shape[-1]), bool))
+        D = jnp.where(tri[None, None], jnp.exp(logD), 0.0)
+        carry_w = jnp.exp(a + m0[:, None] - m)                # (B,L,H)
+        num = (jnp.einsum("bthd,bhde->bthe", qf, C0) *
+               carry_w[..., None]
+               + jnp.einsum("bhts,bshd->bthd", D * s, vf))
+        qn = (jnp.einsum("bthd,bhd->bth", qf, n0) * carry_w
+              + jnp.einsum("bhts,bhts->bht", D, s).transpose(0, 2, 1))
+        h = num / jnp.maximum(jnp.abs(qn),
+                              jnp.exp(-m))[..., None]         # (B,L,H,dh)
+        # Chunk-end state: weights exp(a_L + b_tau - m_L) per tau.
+        aL = a[:, -1];  mL = m[:, -1]                          # (B,H)
+        w_tau = jnp.exp(aL[:, None] + b - mL[:, None])        # (B,L,H)
+        C = (jnp.exp(aL + m0 - mL)[..., None, None] * C0
+             + jnp.einsum("bshd,bsh,bshe->bhde", kf, w_tau, vf))
+        n = (jnp.exp(aL + m0 - mL)[..., None] * n0
+             + jnp.einsum("bshd,bsh->bhd", kf, w_tau))
+        return (C, n, mL), h
+
+    state, hs = jax.lax.scan(body, state, (qs, ks, vs, lis, lfs))
+    hs = hs.transpose(1, 0, 2, 3, 4).reshape(B, nchunks * chunk, H, dh)
+    return hs[:, :S], state
+
+
+def mlstm_forward(params: Params, x: jax.Array, cfg: ModelConfig,
+                  impl: str = "auto") -> Tuple[jax.Array, Tuple[jax.Array, ...]]:
+    B, S, d = x.shape
+    dp, H, dh = _xlstm_dims(cfg)
+    up = x @ params["w_up"]
+    xin, z = jnp.split(up, 2, axis=-1)
+    q, k, v, li, lf = _mlstm_qkvg(params, xin, H, dh)
+    state = init_mlstm_state(cfg, B)
+    if impl == "auto":
+        impl = "chunkwise" if S >= 128 else "sequential"
+    if impl == "chunkwise":
+        hs, state = _mlstm_chunkwise(q, k, v, li, lf, state)
+    else:
+        hs, state = _mlstm_recurrence(q, k, v, li, lf, state)
+    y = hs.reshape(B, S, dp).astype(x.dtype) * jax.nn.silu(z)
+    return y @ params["w_down"], state
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int):
+    dp, H, dh = _xlstm_dims(cfg)
+    return (jnp.zeros((batch, H, dh, dh), jnp.float32),
+            jnp.zeros((batch, H, dh), jnp.float32),
+            jnp.full((batch, H), -1e30, jnp.float32))
+
+
+def mlstm_step(params: Params, x_t: jax.Array, state, cfg: ModelConfig):
+    B = x_t.shape[0]
+    dp, H, dh = _xlstm_dims(cfg)
+    up = x_t[:, 0] @ params["w_up"]
+    xin, z = jnp.split(up, 2, axis=-1)
+    q, k, v, li, lf = _mlstm_qkvg(params, xin, H, dh)
+    hs, state = _mlstm_recurrence(q[:, None], k[:, None], v[:, None],
+                                  li[:, None], lf[:, None], state)
+    y = hs[:, 0].reshape(B, dp).astype(x_t.dtype) * jax.nn.silu(z)
+    return (y @ params["w_down"])[:, None], state
+
+
+# ------------------------------------------------------------------ sLSTM --
+
+def init_slstm(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    d = cfg.d_model
+    dp, _, _ = _xlstm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    std = 1.0 / math.sqrt(d)
+    stdp = 1.0 / math.sqrt(dp)
+    return {
+        "w_up": (jax.random.normal(ks[0], (d, 2 * dp)) * std).astype(dtype),
+        "w_gates": (jax.random.normal(ks[1], (dp, 4 * dp)) *
+                    stdp).astype(dtype),
+        "r_gates": (jax.random.normal(ks[2], (dp, 4 * dp)) *
+                    stdp * 0.5).astype(dtype),
+        "g_bias": jnp.zeros((4 * dp,), jnp.float32),
+        "w_down": (jax.random.normal(ks[3], (dp, d)) * stdp).astype(dtype),
+    }
+
+
+def _slstm_recurrence(params: Params, xin: jax.Array, state, dp: int):
+    """Stabilized sLSTM: scalar memory with exp input gate. xin: (B,S,dp).
+
+    §Perf iteration A2: the input-side gate projection (T small matmuls) is
+    hoisted out of the scan as one (B*S, dp) x (dp, 4dp) MXU matmul; only
+    the recurrent R @ h_{t-1} term stays sequential (data dependence)."""
+    x_pre = (xin @ params["w_gates"]).astype(jnp.float32) + params["g_bias"]
+
+    def step(carry, xp_t):
+        c, n, m, h = carry
+        pre = xp_t + \
+            (h.astype(xin.dtype) @ params["r_gates"]).astype(jnp.float32)
+        li, lf, zg, og = jnp.split(pre, 4, axis=-1)
+        lf = -jax.nn.softplus(-lf)                 # log sigmoid
+        m_new = jnp.maximum(lf + m, li)
+        i_ = jnp.exp(li - m_new)
+        f_ = jnp.exp(lf + m - m_new)
+        c = f_ * c + i_ * jnp.tanh(zg)
+        n = f_ * n + i_
+        h_new = jax.nn.sigmoid(og) * c / jnp.maximum(n, 1e-6)
+        return (c, n, m_new, h_new), h_new
+
+    state, hs = jax.lax.scan(step, state, x_pre.transpose(1, 0, 2))
+    return hs.transpose(1, 0, 2), state
+
+
+def slstm_forward(params: Params, x: jax.Array, cfg: ModelConfig):
+    B, S, d = x.shape
+    dp, _, _ = _xlstm_dims(cfg)
+    up = x @ params["w_up"]
+    xin, z = jnp.split(up, 2, axis=-1)
+    state = init_slstm_state(cfg, B)
+    hs, state = _slstm_recurrence(params, xin, state, dp)
+    y = hs.astype(x.dtype) * jax.nn.silu(z)
+    return y @ params["w_down"], state
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    dp, _, _ = _xlstm_dims(cfg)
+    z = jnp.zeros((batch, dp), jnp.float32)
+    return (z, z, jnp.full((batch, dp), -1e30, jnp.float32), z)
+
+
+def slstm_step(params: Params, x_t: jax.Array, state, cfg: ModelConfig):
+    dp, _, _ = _xlstm_dims(cfg)
+    up = x_t[:, 0] @ params["w_up"]
+    xin, z = jnp.split(up, 2, axis=-1)
+    hs, state = _slstm_recurrence(params, xin[:, None], state, dp)
+    y = hs[:, 0].astype(x_t.dtype) * jax.nn.silu(z)
+    return (y @ params["w_down"])[:, None], state

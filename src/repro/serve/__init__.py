@@ -1,0 +1,1 @@
+"""Serving: paged KV cache (paper-cost eviction/placement), decode engine."""

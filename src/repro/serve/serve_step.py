@@ -1,0 +1,40 @@
+"""Serve-step construction: batched single-token decode and prefill.
+
+``serve_step``: (params, tokens (B,1), state, pos (B,)) ->
+(next_tokens (B,1), logits_last, state'). Greedy argmax keeps the dry-run
+output small; the engine layer does real sampling on host.
+
+``prefill_step``: full forward returning last-position logits — the compute
+shape of serving prefill (KV-cache writes are modeled by the decode path)."""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import decode_step, forward
+
+PyTree = Any
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    def serve_step(params: PyTree, tokens: jax.Array, state: PyTree,
+                   pos: jax.Array):
+        logits, state = decode_step(params, cfg, tokens, state, pos)
+        next_tokens = jnp.argmax(logits[:, -1], axis=-1).astype(
+            jnp.int32)[:, None]
+        return next_tokens, state
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, attention_impl: str = "auto"
+                      ) -> Callable:
+    def prefill_step(params: PyTree, tokens=None, embeds=None):
+        logits, _ = forward(params, cfg, tokens=tokens, embeds=embeds,
+                            attention_impl=attention_impl, remat=True)
+        if cfg.encoder_only:
+            return logits          # encoder: per-frame outputs
+        return logits[:, -1]       # decoder prefill: next-token logits
+    return prefill_step

@@ -1,0 +1,1 @@
+"""Partition rules: TP/FSDP/DP/EP/SP sharding specs."""

@@ -1,0 +1,215 @@
+"""Sharding rules: parameter/activation PartitionSpecs for the production
+meshes.
+
+Parallelism (DESIGN.md §5):
+  * TP (Megatron-style) over the ``model`` axis: attention QKV column- /
+    O row-parallel, MLP in/out column/row, MoE expert-parallel (expert axis
+    over ``model``), Mamba inner channels over ``model``, vocab-parallel
+    embeddings.
+  * DP over ``('pod','data')`` for batches.
+  * FSDP (param + optimizer-state sharding) over the DP axes for models
+    above ``fsdp_threshold`` parameters.
+
+Any rule whose dimension is not divisible by the mesh-axis size silently
+degrades to replication for that dimension (e.g. internvl2's 92,553 vocab is
+not divisible by 16 -> embedding stays replicated). The dry-run prints the
+per-leaf result so degradations are visible, not silent.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    tp_axis: str = "model"
+    dp_axes: Tuple[str, ...] = ("data",)
+    fsdp: bool = False
+    # Dry-run-only knob: decode KV/sequence sharding axes.
+    seq_axes: Tuple[str, ...] = ("model",)
+
+    @property
+    def fsdp_axes(self) -> Optional[Tuple[str, ...]]:
+        return self.dp_axes if self.fsdp else None
+
+
+def make_policy(cfg: ModelConfig, mesh: Mesh,
+                fsdp_threshold: float = 5e9) -> ShardingPolicy:
+    axes = list(mesh.axis_names)
+    dp = tuple(a for a in axes if a in ("pod", "data"))
+    fsdp = cfg.param_count() > fsdp_threshold
+    return ShardingPolicy(tp_axis="model", dp_axes=dp, fsdp=fsdp)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+class RuleContext:
+    def __init__(self, mesh: Mesh, policy: ShardingPolicy):
+        self.mesh = mesh
+        self.policy = policy
+
+    def fit(self, axes, dim: int):
+        """Return axes if they evenly divide dim, else None (replicate)."""
+        if axes is None:
+            return None
+        if dim % _axis_size(self.mesh, axes) != 0:
+            return None
+        return axes
+
+
+# Parameter rules: (path regex, lambda(shape, ctx) -> PartitionSpec entries
+# for the *unstacked* param). Stacked block leaves get None prepended.
+def _param_spec(path: str, shape: Tuple[int, ...], ctx: RuleContext) -> P:
+    tp = ctx.policy.tp_axis
+    f = ctx.policy.fsdp_axes
+    leaf = path.rsplit("/", 1)[-1]
+
+    def fit(axes, dim):
+        return ctx.fit(axes, dim)
+
+    if leaf == "table":                               # embed/unembed/head
+        return P(fit(tp, shape[0]), fit(f, shape[1]))
+    if leaf in ("wq", "wk", "wv"):
+        return P(fit(f, shape[0]), fit(tp, shape[1]))
+    if leaf in ("bq", "bk", "bv"):
+        return P(fit(tp, shape[0]))
+    if leaf == "wo":
+        return P(fit(tp, shape[0]), fit(f, shape[1]))
+    if leaf == "router":
+        return P(fit(f, shape[0]), None)
+    if leaf in ("w_in", "w_gate"):
+        if len(shape) == 3:                           # MoE (E, d, de)
+            return P(fit(tp, shape[0]), fit(f, shape[1]), None)
+        return P(fit(f, shape[0]), fit(tp, shape[1]))
+    if leaf == "w_out":
+        if len(shape) == 3:                           # MoE (E, de, d)
+            return P(fit(tp, shape[0]), None, fit(f, shape[2]))
+        return P(fit(tp, shape[0]), fit(f, shape[1]))
+    if leaf in ("sh_in", "sh_gate"):
+        return P(fit(f, shape[0]), fit(tp, shape[1]))
+    if leaf == "sh_out":
+        return P(fit(tp, shape[0]), fit(f, shape[1]))
+    # Mamba.
+    if leaf == "conv_w":
+        return P(None, fit(tp, shape[1]))
+    if leaf in ("conv_b", "dt_bias", "D"):
+        return P(fit(tp, shape[0]))
+    if leaf in ("w_dt_down", "w_bc", "A_log"):
+        return P(fit(tp, shape[0]), None)
+    if leaf == "w_dt_up":
+        return P(None, fit(tp, shape[1]))
+    # xLSTM.
+    if leaf == "w_up":
+        return P(fit(f, shape[0]), fit(tp, shape[1]))
+    if leaf in ("w_gates", "r_gates"):
+        return P(None, fit(tp, shape[1]))
+    if leaf in ("g_bias",):
+        return P(fit(tp, shape[0]))
+    if leaf == "w_if":
+        return P(fit(tp, shape[0]), None)
+    if leaf == "if_bias":
+        return P(None)
+    if leaf == "w_down":
+        return P(fit(tp, shape[0]), fit(f, shape[1]))
+    # Norm scales/biases and anything unmatched: replicate.
+    return P(*([None] * len(shape)))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(abstract_params: PyTree, mesh: Mesh,
+                policy: ShardingPolicy) -> PyTree:
+    """PartitionSpec pytree for a param tree (abstract or concrete). Leaves
+    under ``blocks/`` carry a stacked leading period axis -> prepend None."""
+    ctx = RuleContext(mesh, policy)
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        if ps.startswith("blocks/"):
+            inner = _param_spec(ps, shape[1:], ctx)
+            return P(None, *inner)
+        return _param_spec(ps, shape, ctx)
+
+    return jax.tree_util.tree_map_with_path(one, abstract_params)
+
+
+def param_shardings(abstract_params: PyTree, mesh: Mesh,
+                    policy: ShardingPolicy) -> PyTree:
+    specs = param_specs(abstract_params, mesh, policy)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(mesh: Mesh, policy: ShardingPolicy, batch: int,
+               extra_dims: int = 1) -> P:
+    """Shard the batch dim over DP axes when divisible."""
+    ctx = RuleContext(mesh, policy)
+    b_axes = ctx.fit(policy.dp_axes, batch)
+    return P(b_axes, *([None] * extra_dims))
+
+
+def decode_state_specs(abstract_state: PyTree, mesh: Mesh,
+                       policy: ShardingPolicy, batch: int,
+                       seq_axes: Tuple[str, ...]) -> PyTree:
+    """Decode-state sharding: KV caches (P, B, S, Hk, Dh) shard B over DP
+    and S over ``seq_axes``; recurrent states shard their channel axis over
+    TP when divisible."""
+    ctx = RuleContext(mesh, policy)
+    b_axes = ctx.fit(policy.dp_axes, batch)
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        leaf_name = ps.rsplit("/", 1)[-1]
+        if leaf_name in ("k", "v"):          # (P, B, S, Hk, Dh)
+            s_axes = ctx.fit(seq_axes, shape[2])
+            return P(None, b_axes, s_axes, None, None)
+        if leaf_name == "h" and len(shape) == 4:     # mamba (P, B, di, ds)
+            return P(None, b_axes, ctx.fit(policy.tp_axis, shape[2]), None)
+        if leaf_name == "conv":              # (P, B, dc-1, di)
+            return P(None, b_axes, None, ctx.fit(policy.tp_axis, shape[3]))
+        if leaf_name in ("C",):              # mlstm (P, B, H, dh, dh)
+            return P(None, b_axes, None, None, None)
+        if leaf_name in ("n", "m"):          # mlstm/slstm small states
+            return P(None, b_axes, *([None] * (len(shape) - 2)))
+        if len(shape) >= 2:
+            return P(None, b_axes, *([None] * (len(shape) - 2)))
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(one, abstract_state)
+
+
+def tree_shardings(spec_tree: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

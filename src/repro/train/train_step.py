@@ -1,0 +1,90 @@
+"""Train-step construction: loss, grads, microbatch accumulation, AdamW.
+
+``make_train_step(cfg, opt_cfg)`` returns a pure function
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` suitable for
+``jax.jit`` with sharded inputs. Batches are dicts:
+
+  LM:    {"tokens": (B,S) i32, "labels": (B,S) i32}
+  audio: {"embeds": (B,S,d) bf16, "labels": (B,S) i32}
+  VLM:   {"tokens": (B,S_t) i32, "embeds": (B,Np,d) bf16, "labels": (B,S) i32}
+
+With ``n_microbatches > 1`` the leading batch dim is split and gradients are
+accumulated with a ``lax.scan`` (the production path for large global
+batches); remat is applied per layer-period inside the model."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import forward, lm_loss
+from repro.train.optimizer import (OptimizerConfig, adamw_init, adamw_update)
+
+PyTree = Any
+Batch = Dict[str, jax.Array]
+
+
+def loss_fn(params: PyTree, cfg: ModelConfig, batch: Batch,
+            attention_impl: str = "auto", remat: bool = True,
+            aux_weight: float = 0.01) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, aux = forward(params, cfg, tokens=batch.get("tokens"),
+                          embeds=batch.get("embeds"),
+                          attention_impl=attention_impl, remat=remat)
+    loss = lm_loss(logits, batch["labels"])
+    total = loss + aux_weight * aux
+    return total, {"loss": loss, "aux_loss": aux}
+
+
+def make_train_step(cfg: ModelConfig,
+                    opt_cfg: Optional[OptimizerConfig] = None,
+                    n_microbatches: int = 1,
+                    attention_impl: str = "auto",
+                    remat: bool = True) -> Callable:
+    opt_cfg = opt_cfg or OptimizerConfig()
+    lfn = functools.partial(loss_fn, cfg=cfg, attention_impl=attention_impl,
+                            remat=remat)
+
+    def train_step(params: PyTree, opt_state: PyTree, batch: Batch):
+        if n_microbatches == 1:
+            (_, metrics), grads = jax.value_and_grad(
+                lambda p: lfn(p, batch=batch), has_aux=True)(params)
+        else:
+            def split(x):
+                b = x.shape[0]
+                mb = b // n_microbatches
+                return x.reshape(n_microbatches, mb, *x.shape[1:])
+
+            mb_batch = jax.tree.map(split, batch)
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc(carry, mb):
+                g_sum, m_sum = carry
+                (_, metrics), g = jax.value_and_grad(
+                    lambda p: lfn(p, batch=mb), has_aux=True)(params)
+                g_sum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_sum, g)
+                m_sum = jax.tree.map(lambda a, b: a + b, m_sum, metrics)
+                return (g_sum, m_sum), None
+
+            zero_m = {"loss": jnp.zeros(()), "aux_loss": jnp.zeros(())}
+            (grads, msum), _ = jax.lax.scan(acc, (zero_g, zero_m), mb_batch)
+            grads = jax.tree.map(lambda g: g / n_microbatches, grads)
+            metrics = jax.tree.map(lambda m: m / n_microbatches, msum)
+        params, opt_state, opt_metrics = adamw_update(params, grads,
+                                                      opt_state, opt_cfg)
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, key,
+                     opt_cfg: Optional[OptimizerConfig] = None):
+    from repro.models.model import init_params
+    params = init_params(cfg, key)
+    opt_state = adamw_init(params, opt_cfg or OptimizerConfig())
+    return params, opt_state

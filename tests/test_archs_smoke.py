@@ -1,0 +1,127 @@
+"""Per-architecture smoke tests: a reduced config of the same family runs
+one forward and one train-gradient step on CPU; decoders also run one decode
+step. Asserts output shapes and finiteness (no NaNs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get, list_archs, reduced
+from repro.models import (decode_step, forward, init_decode_state,
+                          init_params, lm_loss)
+
+B, S = 2, 16
+N_PATCH = 4
+
+
+def _inputs(cfg, key):
+    """(tokens, embeds, labels) for a reduced config."""
+    kt, ke = jax.random.split(key)
+    if cfg.frontend == "audio_frames":
+        embeds = jax.random.normal(ke, (B, S, cfg.d_model), jnp.float32)
+        labels = jax.random.randint(kt, (B, S), 0, cfg.vocab_size)
+        return None, embeds, labels
+    if cfg.frontend == "vision_patches":
+        tokens = jax.random.randint(kt, (B, S - N_PATCH), 0, cfg.vocab_size)
+        embeds = jax.random.normal(ke, (B, N_PATCH, cfg.d_model), jnp.float32)
+        labels = jnp.concatenate(
+            [jnp.full((B, N_PATCH), -1, jnp.int32),
+             jax.random.randint(ke, (B, S - N_PATCH), 0, cfg.vocab_size)],
+            axis=1)
+        return tokens, embeds, labels
+    tokens = jax.random.randint(kt, (B, S), 0, cfg.vocab_size)
+    return tokens, None, tokens
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_forward_and_grad(arch):
+    cfg = reduced(get(arch))
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    tokens, embeds, labels = _inputs(cfg, key)
+    logits, aux = forward(params, cfg, tokens=tokens, embeds=embeds)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+    def loss_fn(p):
+        lg, a = forward(p, cfg, tokens=tokens, embeds=embeds)
+        return lm_loss(lg, labels) + 0.01 * a
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss))
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.isfinite(g.astype(jnp.float32)).all()) for g in flat)
+    # At least one grad is nonzero (the model is actually differentiable).
+    assert any(float(jnp.abs(g.astype(jnp.float32)).max()) > 0 for g in flat)
+
+
+@pytest.mark.parametrize("arch", [a for a in list_archs()
+                                  if not ARCHS[a].encoder_only])
+def test_decode_step(arch):
+    cfg = reduced(get(arch))
+    key = jax.random.PRNGKey(1)
+    params = init_params(cfg, key)
+    state = init_decode_state(cfg, batch=B, max_len=32)
+    pos = jnp.zeros((B,), jnp.int32)
+    tok = jnp.ones((B, 1), jnp.int32)
+    for step in range(3):
+        logits, state = decode_step(params, cfg, tok, state, pos + step)
+        assert logits.shape == (B, 1, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+        tok = logits.argmax(-1).astype(jnp.int32)
+
+
+@pytest.mark.parametrize("arch", [a for a in list_archs()
+                                  if ARCHS[a].uses_attention
+                                  and not ARCHS[a].encoder_only
+                                  and ARCHS[a].frontend is None])
+def test_decode_matches_forward(arch):
+    """Teacher-forced decode must agree with the parallel forward pass."""
+    cfg = reduced(get(arch))
+    key = jax.random.PRNGKey(2)
+    params = init_params(cfg, key)
+    tokens = jax.random.randint(key, (B, 8), 0, cfg.vocab_size)
+    logits_fw, _ = forward(params, cfg, tokens=tokens)
+    state = init_decode_state(cfg, batch=B, max_len=8)
+    outs = []
+    for t in range(8):
+        lg, state = decode_step(params, cfg, tokens[:, t:t + 1], state,
+                                jnp.full((B,), t, jnp.int32))
+        outs.append(lg[:, 0])
+    logits_dec = jnp.stack(outs, axis=1)
+    # bf16 residual stacks accumulate noise; compare with bf16-scale slack.
+    np.testing.assert_allclose(np.asarray(logits_fw, np.float32),
+                               np.asarray(logits_dec, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_param_count_sane():
+    # Analytic counts should be within 25% of the advertised sizes.
+    expect = {
+        "qwen1.5-0.5b": 0.5e9, "nemotron-4-340b": 340e9, "olmo-1b": 1.2e9,
+        "llama3.2-3b": 3.2e9, "deepseek-moe-16b": 16e9,
+        "phi3.5-moe-42b-a6.6b": 42e9, "xlstm-125m": 0.125e9,
+        "hubert-xlarge": 1.0e9, "jamba-1.5-large-398b": 398e9,
+        "internvl2-2b": 2.0e9,
+    }
+    for name, target in expect.items():
+        got = get(name).param_count()
+        assert 0.5 * target < got < 1.6 * target, \
+            f"{name}: {got/1e9:.2f}B vs expected ~{target/1e9:.0f}B"
+
+
+def test_moe_active_params_less_than_total():
+    for name in ("deepseek-moe-16b", "phi3.5-moe-42b-a6.6b",
+                 "jamba-1.5-large-398b"):
+        cfg = get(name)
+        assert cfg.active_param_count() < 0.6 * cfg.param_count()
+
+
+def test_reduced_preserves_structure():
+    for name in list_archs():
+        cfg, r = get(name), reduced(get(name))
+        assert r.layer_pattern == cfg.layer_pattern
+        assert r.family == cfg.family
+        assert r.qkv_bias == cfg.qkv_bias
+        assert r.encoder_only == cfg.encoder_only
+        assert (r.moe is None) == (cfg.moe is None)

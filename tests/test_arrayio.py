@@ -1,0 +1,78 @@
+import numpy as np
+import pytest
+
+from repro.arrayio import formats
+from repro.arrayio.catalog import FileReader, build_catalog
+from repro.arrayio.generator import make_geo_files, make_ptf_files
+from repro.core.geometry import points_in_box
+
+
+@pytest.fixture(scope="module")
+def sample():
+    rng = np.random.default_rng(0)
+    coords = rng.integers(1, 10_000, size=(257, 3)).astype(np.int64)
+    attrs = rng.normal(size=(257, 2)).astype(np.float32)
+    return coords, attrs
+
+
+@pytest.mark.parametrize("fmt", formats.FORMATS)
+def test_roundtrip(tmp_path, sample, fmt):
+    coords, attrs = sample
+    path = str(tmp_path / f"t.{fmt}")
+    nbytes = formats.write_array_file(path, fmt, coords, attrs)
+    assert nbytes > 0
+    c2, a2 = formats.read_array_file(path, fmt)
+    np.testing.assert_array_equal(coords, c2)
+    if fmt == "csv":
+        np.testing.assert_allclose(attrs, a2, rtol=1e-4)
+    else:
+        np.testing.assert_allclose(attrs, a2, rtol=1e-6)
+
+
+@pytest.mark.parametrize("fmt", formats.FORMATS)
+def test_empty_and_single_row(tmp_path, fmt):
+    path = str(tmp_path / f"s.{fmt}")
+    coords = np.array([[3, 4]], dtype=np.int64)
+    attrs = np.array([[1.5]], dtype=np.float32)
+    formats.write_array_file(path, fmt, coords, attrs)
+    c2, a2 = formats.read_array_file(path, fmt)
+    np.testing.assert_array_equal(coords, c2)
+
+
+def test_fits_header_is_blocked(tmp_path, sample):
+    coords, attrs = sample
+    path = str(tmp_path / "h.fits")
+    n = formats.write_array_file(path, "fits", coords, attrs)
+    assert n % 2880 == 0          # FITS files are multiples of 2880 bytes
+
+
+def test_generators_respect_domain_and_skew():
+    files = make_ptf_files(n_files=8, cells_per_file_mean=500, seed=1)
+    sizes = [f.coords.shape[0] for f in files]
+    assert len(files) == 8 and min(sizes) >= 16
+    assert max(sizes) > 2 * (sum(sizes) / len(sizes))   # heavy tail
+    for f in files:
+        assert points_in_box(f.coords, f.box).all()
+        # Boxes of consecutive nights overlap in (ra, dec) — files overlap.
+    geo = make_geo_files(n_files=4, n_seeds=50, clones_per_seed=5)
+    assert len(geo) == 4
+    for g in geo:
+        assert g.coords.shape[1] == 2
+
+
+@pytest.mark.parametrize("fmt", formats.FORMATS)
+def test_build_catalog(tmp_path, fmt):
+    files = make_ptf_files(n_files=4, cells_per_file_mean=200, seed=2)
+    catalog, data = build_catalog(files, str(tmp_path), fmt, n_nodes=3)
+    assert len(catalog.files) == 4
+    assert {f.node for f in catalog.files} <= {0, 1, 2}
+    reader = FileReader(catalog, data)
+    c, a = reader.read(2)
+    np.testing.assert_array_equal(c, files[2].coords)
+    # Disk path agrees with the in-memory path.
+    reader_disk = FileReader(catalog, None)
+    c2, _ = reader_disk.read(2)
+    np.testing.assert_array_equal(c, c2)
+    # Catalog boxes are the acquisition boxes.
+    assert catalog.files[1].box == files[1].box
+    assert catalog.domain.contains_box(files[0].box)

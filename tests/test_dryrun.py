@@ -1,0 +1,45 @@
+"""Deliverable (e) guard: the multi-pod dry-run lowers+compiles in a fresh
+subprocess (512 forced host devices) for representative cells, and the
+roofline row has sane fields."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_dryrun(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=540)
+
+
+@pytest.mark.slow
+def test_single_cell_multipod(tmp_path):
+    out = str(tmp_path / "r.jsonl")
+    res = run_dryrun("--arch", "olmo-1b", "--shape", "decode_32k",
+                     "--mesh", "multipod", "--out", out)
+    assert res.returncode == 0, res.stdout + res.stderr
+    row = json.loads(open(out).readline())
+    assert row["status"] == "ok"
+    assert row["chips"] == 512
+    assert row["hlo_flops_per_chip"] > 0
+    assert row["memory_s"] > 0
+    assert row["bottleneck"] in ("compute", "memory", "collective", "serial")
+    assert row["memory_analysis"]["temp_bytes"] is not None
+
+
+@pytest.mark.slow
+def test_skip_cells_are_reported(tmp_path):
+    out = str(tmp_path / "s.jsonl")
+    res = run_dryrun("--arch", "hubert-xlarge", "--shape", "decode_32k",
+                     "--mesh", "pod", "--out", out)
+    assert res.returncode == 0, res.stdout + res.stderr
+    row = json.loads(open(out).readline())
+    assert row["status"] == "skip"
+    assert "encoder-only" in row["reason"]

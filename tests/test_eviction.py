@@ -1,0 +1,122 @@
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.eviction import (LRUCache, Triple, cost_based_eviction)
+
+
+def T(l, f, chunks):
+    return Triple(l, f, frozenset(chunks))
+
+
+CHUNKS = {1: 100, 2: 100, 3: 100, 4: 100, 5: 300, 6: 50}
+FILES = {0: 10_000, 1: 10_000, 2: 500}
+
+
+def test_current_query_always_kept():
+    res = cost_based_eviction([], [T(3, 0, [1, 2])], budget_bytes=50,
+                              chunk_bytes=CHUNKS, file_bytes=FILES)
+    assert res.cached_chunks == {1, 2}
+    assert len(res.state) == 1
+
+
+def test_recent_query_preferred():
+    history = [T(1, 0, [1]), T(2, 1, [2])]
+    res = cost_based_eviction(history, [T(3, 2, [6])], budget_bytes=160,
+                              chunk_bytes=CHUNKS, file_bytes=FILES)
+    # Only one of chunks 1/2 fits; exponential decay favors query 2.
+    assert 2 in res.cached_chunks and 1 not in res.cached_chunks
+    assert 6 in res.cached_chunks
+
+
+def test_expensive_file_preferred_over_cheap():
+    # Same query index; file 0 costs 10000 to scan, file 2 costs 500.
+    history = [T(1, 0, [1]), T(1, 2, [2])]
+    res = cost_based_eviction(history, [], budget_bytes=100,
+                              chunk_bytes=CHUNKS, file_bytes=FILES)
+    assert 1 in res.cached_chunks and 2 not in res.cached_chunks
+
+
+def test_shared_chunk_boost():
+    # Keeping (1,2) halves what it takes to complete triple (2,3): its cost
+    # is boosted (line 6) and it must beat the cheap-file triple (4,).
+    history = [T(5, 0, [1, 2]), T(2, 1, [2, 3]), T(2, 2, [4])]
+    res = cost_based_eviction(history, [], budget_bytes=300,
+                              chunk_bytes=CHUNKS, file_bytes=FILES)
+    assert {1, 2, 3} <= res.cached_chunks
+    assert 4 not in res.cached_chunks
+
+
+def test_fully_cached_triples_are_free():
+    history = [T(1, 0, [1]), T(2, 1, [1])]   # same chunk via two queries
+    res = cost_based_eviction(history, [], budget_bytes=100,
+                              chunk_bytes=CHUNKS, file_bytes=FILES)
+    assert res.cached_chunks == {1}
+    assert res.kept_from_history == 2        # second one rides along free
+
+
+def test_budget_respected():
+    history = [T(i, 0, [i]) for i in (1, 2, 3, 4)]
+    res = cost_based_eviction(history, [], budget_bytes=250,
+                              chunk_bytes=CHUNKS, file_bytes=FILES)
+    used = sum(CHUNKS[c] for c in res.cached_chunks)
+    assert used <= 250
+    # Greedy by recency: chunks 4 and 3 kept.
+    assert res.cached_chunks == {3, 4}
+
+
+def test_deferred_triple_fits_after_boost():
+    # (5,6): 350 bytes does not fit alone in 150; after chunk 5 is cached by
+    # the newer triple, the leftover 50 fits.
+    history = [T(1, 0, [5, 6]), T(9, 1, [5])]
+    res = cost_based_eviction(history, [], budget_bytes=350,
+                              chunk_bytes=CHUNKS, file_bytes=FILES)
+    assert {5, 6} <= res.cached_chunks
+
+
+@given(st.integers(0, 10_000), st.integers(50, 2000))
+@settings(max_examples=40, deadline=None)
+def test_budget_never_exceeded_property(seed, budget):
+    import random
+    rnd = random.Random(seed)
+    chunk_bytes = {i: rnd.randint(10, 200) for i in range(30)}
+    file_bytes = {i: rnd.randint(500, 5000) for i in range(6)}
+    history = []
+    for l in range(1, 12):
+        f = rnd.randrange(6)
+        cs = rnd.sample(range(30), rnd.randint(1, 5))
+        history.append(T(l, f, cs))
+    current = [T(12, 0, rnd.sample(range(30), 3))]
+    res = cost_based_eviction(history, current, budget,
+                              chunk_bytes, file_bytes)
+    used = sum(chunk_bytes[c] for c in res.cached_chunks)
+    current_bytes = sum(chunk_bytes[c] for c in
+                        set().union(*[t.chunk_ids for t in current]))
+    # Current query may overflow on its own; beyond that, budget holds.
+    assert used <= max(budget, current_bytes)
+    for t in res.state:
+        assert t.chunk_ids <= res.cached_chunks
+
+
+def test_lru_cache_basics():
+    lru = LRUCache(250)
+    assert lru.admit(1, 100) == []
+    assert lru.admit(2, 100) == []
+    lru.touch(1)                     # 2 is now least recent
+    assert lru.admit(3, 100) == [2]
+    assert 1 in lru and 3 in lru and 2 not in lru
+    # Items over budget are rejected outright.
+    assert lru.admit(9, 999) == []
+    assert 9 not in lru
+
+
+def test_lru_rename_preserves_position():
+    lru = LRUCache(300)
+    lru.admit(1, 100)
+    lru.admit(2, 100)
+    lru.rename(1, [(10, 50), (11, 50)])
+    assert 10 in lru and 11 in lru and 1 not in lru
+    # Children inherit the oldest slot: they evict first.
+    evicted = lru.admit(3, 200)
+    assert set(evicted) == {10, 11}

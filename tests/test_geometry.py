@@ -1,0 +1,73 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.geometry import (Box, bounding_box, enclosing, expand,
+                                 points_in_box, split_boundaries)
+
+
+def test_box_basics():
+    b = Box((1, 1), (4, 8))
+    assert b.volume() == 32
+    assert b.side(0) == 4 and b.side(1) == 8
+    assert b.contains_point((1, 8)) and not b.contains_point((0, 8))
+    assert b.overlaps(Box((4, 8), (9, 9)))
+    assert not b.overlaps(Box((5, 1), (9, 9)))
+    assert b.intersection(Box((3, 4), (10, 10))) == Box((3, 4), (4, 8))
+    assert b.intersection(Box((5, 9), (6, 10))) is None
+    assert b.union_bb(Box((0, 2), (2, 9))) == Box((0, 1), (4, 9))
+
+
+def test_empty_box_raises():
+    with pytest.raises(ValueError):
+        Box((2, 1), (1, 5))
+
+
+def test_bounding_box_and_membership():
+    pts = np.array([[1, 5], [3, 2], [2, 9]])
+    bb = bounding_box(pts)
+    assert bb == Box((1, 2), (3, 9))
+    assert bounding_box(np.zeros((0, 2), np.int64)) is None
+    mask = points_in_box(pts, Box((1, 2), (2, 9)))
+    assert mask.tolist() == [True, False, True]
+
+
+def test_expand_clips_to_domain():
+    dom = Box((1, 1), (10, 10))
+    assert expand(Box((1, 4), (2, 5)), 2, dom) == Box((1, 2), (4, 7))
+
+
+def test_split_boundaries_faces():
+    q = Box((3, 3), (6, 6))
+    bb = Box((1, 4), (9, 5))        # q bisects bb only along dim 0
+    bnds = set(split_boundaries(q, bb))
+    assert bnds == {(0, 2), (0, 6)}
+    # bb inside q -> no face passes through
+    assert split_boundaries(q, Box((4, 4), (5, 5))) == []
+
+
+coords_strategy = st.lists(
+    st.tuples(st.integers(0, 50), st.integers(0, 50), st.integers(0, 50)),
+    min_size=1, max_size=200)
+
+
+@given(coords_strategy)
+@settings(max_examples=50, deadline=None)
+def test_bounding_box_is_tight_and_contains_all(pts):
+    arr = np.array(pts, dtype=np.int64)
+    bb = bounding_box(arr)
+    assert points_in_box(arr, bb).all()
+    lo, hi = bb.as_arrays()
+    assert (arr.min(axis=0) == lo).all() and (arr.max(axis=0) == hi).all()
+
+
+@given(coords_strategy, st.integers(0, 5))
+@settings(max_examples=30, deadline=None)
+def test_expand_contains_all_l1_neighbors(pts, eps):
+    arr = np.array(pts, dtype=np.int64)
+    bb = bounding_box(arr)
+    grown = expand(bb, eps)
+    # Any point at L1 distance <= eps from a member is inside the expansion.
+    shifted = arr.copy()
+    shifted[:, 0] += eps
+    assert points_in_box(shifted, grown).all()

@@ -1,0 +1,91 @@
+"""Loop-aware HLO cost analyzer: trip-count recovery, fusion/while walking,
+collective accounting, in-place aliasing, invariant-carry discounts."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import HloAnalyzer, parse_shape
+
+
+def cost_of(fn, *args):
+    comp = jax.jit(fn).lower(*args).compile()
+    return HloAnalyzer(comp.as_text()).module_cost()
+
+
+def test_parse_shape():
+    s = parse_shape("f32[128,256]{1,0}")
+    assert s.elements == 128 * 256 and s.nbytes == 128 * 256 * 4
+    t = parse_shape("(s32[], bf16[2,3])")
+    assert t.nbytes == 4 + 12
+    assert parse_shape("pred[7]").nbytes == 7
+
+
+def test_scan_flops_multiplied():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        return jax.lax.scan(body, x, None, length=10)[0]
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    cost = cost_of(f, x, w)
+    expect = 10 * 2 * 64 ** 3
+    assert 0.9 * expect < cost.flops < 1.3 * expect
+    assert cost.seq_iters >= 10
+
+
+def test_nested_scan():
+    def f(x, w):
+        def inner(c, _):
+            return c @ w, None
+
+        def outer(c, _):
+            y, _ = jax.lax.scan(inner, c, None, length=5)
+            return jnp.tanh(y), None
+        return jax.lax.scan(outer, x, None, length=3)[0]
+
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    w = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    cost = cost_of(f, x, w)
+    expect = 15 * 2 * 32 ** 3
+    assert 0.9 * expect < cost.flops < 1.4 * expect
+    assert cost.seq_iters >= 15
+
+
+def test_dus_aliasing_counts_slice_not_buffer():
+    big = jax.ShapeDtypeStruct((4096, 1024), jnp.float32)   # 16 MB
+    small = jax.ShapeDtypeStruct((1, 1024), jnp.float32)    # 4 KB
+
+    def f(buf, row):
+        return jax.lax.dynamic_update_slice(buf, row, (7, 0))
+
+    comp = jax.jit(f, donate_argnums=(0,)).lower(big, small).compile()
+    cost = HloAnalyzer(comp.as_text()).module_cost()
+    # With the buffer donated the update is in place: charge ~the update
+    # region, not ~2x the 16MB buffer.
+    assert cost.bytes < 1e6
+
+
+def test_invariant_weight_discount():
+    # h_t = tanh(h_{t-1} @ W): W is a loop-invariant carry. Traffic should
+    # be ~one pass over W, not 100x.
+    def f(h, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        return jax.lax.scan(body, h, None, length=100)[0]
+
+    h = jax.ShapeDtypeStruct((8, 512), jnp.float32)
+    w = jax.ShapeDtypeStruct((512, 512), jnp.float32)     # 1 MB
+    cost = cost_of(f, h, w)
+    assert cost.bytes < 100 * 512 * 512 * 4 * 0.5
+
+
+def test_dot_flops_from_contracting_dims():
+    def f(a, b):
+        return jnp.einsum("bik,bkj->bij", a, b)
+
+    a = jax.ShapeDtypeStruct((4, 32, 64), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 64, 16), jnp.float32)
+    cost = cost_of(f, a, b)
+    expect = 2 * 4 * 32 * 16 * 64
+    assert 0.9 * expect < cost.flops < 1.2 * expect

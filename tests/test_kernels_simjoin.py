@@ -1,0 +1,82 @@
+"""simjoin Pallas kernel vs pure-jnp oracle: shape/dim/eps sweeps +
+hypothesis property tests + cross-check against the cluster's numpy
+executor."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cluster import count_similar_pairs_np as np_counter
+from repro.kernels.simjoin import ops
+from repro.kernels.simjoin.ref import count_pairs_ref
+
+
+def rand_coords(rng, n, d, hi=200):
+    return rng.integers(0, hi, size=(n, d)).astype(np.int32)
+
+
+@pytest.mark.parametrize("n,m", [(1, 1), (7, 13), (128, 128), (130, 255),
+                                 (300, 41), (1024, 77)])
+@pytest.mark.parametrize("d", [2, 3])
+def test_cross_join_matches_ref(n, m, d):
+    rng = np.random.default_rng(n * 1000 + m + d)
+    a = rand_coords(rng, n, d, hi=60)
+    b = rand_coords(rng, m, d, hi=60)
+    for eps in (0, 1, 3):
+        got = int(ops.count_similar_pairs(jnp.asarray(a), jnp.asarray(b),
+                                          eps, False))
+        want = int(count_pairs_ref(jnp.asarray(a), jnp.asarray(b), eps,
+                                   False))
+        assert got == want, (n, m, d, eps)
+
+
+@pytest.mark.parametrize("n", [1, 5, 129, 384, 1000])
+def test_self_join_matches_ref(n):
+    rng = np.random.default_rng(n)
+    a = rand_coords(rng, n, 3, hi=40)
+    for eps in (1, 2):
+        got = int(ops.count_similar_pairs(jnp.asarray(a), jnp.asarray(a),
+                                          eps, True))
+        want = int(count_pairs_ref(jnp.asarray(a), jnp.asarray(a), eps,
+                                   True))
+        assert got == want
+
+
+def test_matches_numpy_cluster_executor():
+    rng = np.random.default_rng(0)
+    a = rand_coords(rng, 257, 3, hi=30)
+    b = rand_coords(rng, 100, 3, hi=30)
+    assert ops.count_similar_pairs_np(a, b, 2, False) == \
+        np_counter(a, b, 2, False)
+    assert ops.count_similar_pairs_np(a, a, 1, True) == \
+        np_counter(a, a, 1, True)
+
+
+def test_empty_inputs():
+    a = np.zeros((0, 2), np.int32)
+    b = rand_coords(np.random.default_rng(1), 10, 2)
+    assert ops.count_similar_pairs_np(a, b, 5, False) == 0
+
+
+def test_dtype_and_large_coords():
+    # Domain coordinates up to 10^5 (PTF ra/dec ranges) stay exact.
+    rng = np.random.default_rng(3)
+    a = rng.integers(0, 100_000, size=(200, 3)).astype(np.int32)
+    got = int(ops.count_similar_pairs(jnp.asarray(a), jnp.asarray(a),
+                                      1000, True))
+    want = int(count_pairs_ref(jnp.asarray(a), jnp.asarray(a), 1000, True))
+    assert got == want
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 80), st.integers(1, 80),
+       st.integers(0, 4))
+@settings(max_examples=20, deadline=None)
+def test_property_random(seed, n, m, eps):
+    rng = np.random.default_rng(seed)
+    a = rand_coords(rng, n, 2, hi=12)
+    b = rand_coords(rng, m, 2, hi=12)
+    got = int(ops.count_similar_pairs(jnp.asarray(a), jnp.asarray(b),
+                                      eps, False))
+    want = int(count_pairs_ref(jnp.asarray(a), jnp.asarray(b), eps, False))
+    assert got == want

@@ -1,0 +1,74 @@
+import pytest
+
+from repro.core.placement import (JoinRecord, cost_based_placement,
+                                  static_placement)
+
+
+def test_singletons_pinned():
+    replicas = {1: {0}, 2: {1}}
+    res = cost_based_placement([], replicas, {1: 10, 2: 10},
+                               {0: 100, 1: 100})
+    assert res.locations == {1: 0, 2: 1}
+    assert res.fallback_moves == [] and res.dropped == []
+
+
+def test_colocates_join_partners():
+    w = [JoinRecord(1, ((1, 2),))]
+    replicas = {1: {0}, 2: {0, 1}}        # 2 was shipped to node 0 to join
+    res = cost_based_placement(w, replicas, {1: 10, 2: 10}, {0: 100, 1: 100})
+    assert res.locations[2] == 0          # stays with its partner
+    assert res.colocated_pair_weight > 0
+
+
+def test_recent_queries_outweigh_old():
+    # Old query joined (1,2); new query joined (1,3). Chunk 1 can keep only
+    # one partner: node 1 holds 2, node 2 holds 3.
+    w = [JoinRecord(1, ((1, 2),)), JoinRecord(8, ((1, 3),))]
+    replicas = {1: {1, 2}, 2: {1}, 3: {2}}
+    res = cost_based_placement(w, replicas, {1: 10, 2: 10, 3: 10},
+                               {0: 100, 1: 100, 2: 100})
+    assert res.locations[1] == 2          # with the recent partner
+
+
+def test_budget_drops_without_fallback_ship():
+    # Piggyback-only (default): chunks that fit no replica node are dropped.
+    w = []
+    replicas = {1: {0}, 2: {0}, 3: {0}}
+    bytes_ = {1: 60, 2: 60, 3: 60}
+    res = cost_based_placement(w, replicas, bytes_, {0: 100, 1: 70})
+    assert len(res.locations) == 1 and len(res.dropped) == 2
+    assert res.fallback_moves == []
+    assert set(res.locations.values()) == {0}
+
+
+def test_budget_fallback_ship_variant():
+    w = []
+    replicas = {1: {0}, 2: {0}, 3: {0}}
+    bytes_ = {1: 60, 2: 60, 3: 60}
+    res = cost_based_placement(w, replicas, bytes_, {0: 100, 1: 70},
+                               allow_fallback_ship=True)
+    placed_nodes = set(res.locations.values())
+    assert 1 in placed_nodes              # someone spilled to node 1
+    assert len(res.locations) + len(res.dropped) == 3
+    used0 = sum(bytes_[c] for c, n in res.locations.items() if n == 0)
+    used1 = sum(bytes_[c] for c, n in res.locations.items() if n == 1)
+    assert used0 <= 100 and used1 <= 70
+
+
+def test_replica_count_ordering():
+    # The 3-replica chunk is placed after the 2-replica chunk.
+    w = [JoinRecord(3, ((10, 11), (10, 12)))]
+    replicas = {10: {0, 1, 2}, 11: {0, 1}, 12: {2}}
+    res = cost_based_placement(w, replicas, {10: 10, 11: 10, 12: 10},
+                               {0: 100, 1: 100, 2: 100})
+    # 12 pinned at 2; 11 placed first among multis; 10 then joins whichever
+    # grouping wins — both partners have weight 1, tie broken by free budget.
+    assert res.locations[12] == 2
+    assert res.locations[10] in (res.locations[11], 2)
+
+
+def test_static_placement_keeps_home():
+    replicas = {1: {0, 1}, 2: {1}}
+    res = static_placement(replicas, {1: 0, 2: 1}, {1: 10, 2: 10},
+                           {0: 100, 1: 100})
+    assert res.locations == {1: 0, 2: 1}

@@ -1,0 +1,122 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.geometry import Box, bounding_box, points_in_box
+from repro.core.rtree import EvolvingRTree, RefineStats
+
+
+def make_tree(coords, min_cells=5):
+    counter = iter(range(1, 1_000_000))
+    return EvolvingRTree(0, np.asarray(coords, dtype=np.int64), 12,
+                         min_cells, lambda: next(counter))
+
+
+def test_single_chunk_initially():
+    t = make_tree([[1, 1], [5, 5], [3, 9]])
+    assert t.n_leaves() == 1
+    assert t.root_box == Box((1, 1), (5, 9))
+
+
+def test_figure3_walkthrough():
+    """Figure 3: three queries over a 2-D array, MinC=5, ends at 4 chunks.
+
+    We reproduce the *behavioral* claims: Q1 splits the root in two; Q2
+    leaves the small relevant chunk alone and splits the other; a query
+    overlapping a chunk with no contained cells forces a split.
+    """
+    # 12 cells, loosely two clusters (top band and bottom band).
+    cells = [[1, 1], [2, 2], [1, 4], [3, 2], [2, 5], [3, 5],
+             [8, 1], [9, 3], [8, 4], [9, 5], [10, 2], [10, 5]]
+    t = make_tree(cells, min_cells=5)
+    # Q1 cuts between the bands along dim 0.
+    q1 = Box((1, 1), (5, 9))
+    got = t.refine(q1)
+    assert t.n_leaves() == 2
+    assert {c.n_cells for c in t.leaves()} == {6}
+    assert len(got) == 1 and got[0].n_cells == 6
+    t.validate()
+    # Q2 overlaps the left chunk only; 6 cells >= MinC -> splits again.
+    q2 = Box((1, 1), (2, 9))
+    t.refine(q2)
+    assert t.n_leaves() >= 3
+    t.validate()
+    # Query overlapping a chunk's box but containing none of its cells
+    # forces a split even below MinC (the "condensing" rule).
+    before = t.n_leaves()
+    empty_q = Box((4, 6), (7, 9))   # in the gap between the bands
+    got = t.refine(empty_q)
+    assert got == []                # no relevant cells
+    t.validate()
+    assert t.n_leaves() >= before   # any overlapping chunk was condensed
+
+
+def test_small_relevant_chunk_not_split():
+    cells = [[1, 1], [2, 2], [3, 3], [4, 4]]
+    t = make_tree(cells, min_cells=5)
+    got = t.refine(Box((1, 1), (2, 2)))
+    # 4 cells < MinC and a queried cell exists -> unchanged per Alg. 1 line 1.
+    assert t.n_leaves() == 1 and len(got) == 1
+
+
+def test_chunk_inside_query_not_split():
+    cells = [[5, 5], [6, 6], [5, 7], [7, 5], [6, 5], [7, 7]]
+    t = make_tree(cells, min_cells=2)
+    got = t.refine(Box((1, 1), (20, 20)))
+    assert t.n_leaves() == 1          # no query face bisects the box
+    assert len(got) == 1
+
+
+def test_refine_returns_only_chunks_with_queried_cells():
+    rng = np.random.default_rng(0)
+    coords = rng.integers(0, 100, size=(500, 2))
+    t = make_tree(coords, min_cells=20)
+    q = Box((10, 10), (30, 30))
+    got = t.refine(q)
+    for c in got:
+        pts = t.coords[c.cell_idx]
+        assert points_in_box(pts, q).any()
+    t.validate()
+
+
+def test_descendants_after_splits():
+    rng = np.random.default_rng(1)
+    coords = rng.integers(0, 60, size=(300, 3))
+    t = make_tree(coords, min_cells=10)
+    root_id = t.leaves()[0].chunk_id
+    for lo in range(0, 50, 7):
+        t.refine(Box((lo, lo, lo), (lo + 10, lo + 10, lo + 10)))
+    desc = t.descendants(root_id)
+    assert set(desc) == {c.chunk_id for c in t.leaves()}
+    total = sum(t.get_chunk(d).n_cells for d in desc)
+    assert total == 300
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 40))
+@settings(max_examples=25, deadline=None)
+def test_invariants_under_random_workload(seed, min_cells):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(5, 400))
+    coords = rng.integers(0, 80, size=(n, 2))
+    t = make_tree(coords, min_cells=min_cells)
+    for _ in range(8):
+        lo = rng.integers(0, 70, size=2)
+        hi = lo + rng.integers(1, 25, size=2)
+        q = Box(tuple(int(x) for x in lo), tuple(int(x) for x in hi))
+        got = t.refine(q)
+        t.validate()
+        # Leaves returned are exactly those holding >= 1 queried cell.
+        expect = set()
+        for c in t.leaves():
+            if points_in_box(t.coords[c.cell_idx], q).any():
+                expect.add(c.chunk_id)
+        assert {c.chunk_id for c in got} == expect
+
+
+def test_pruning_via_overlapping():
+    cells = [[1, 1], [2, 2], [50, 50], [51, 51]]
+    t = make_tree(cells, min_cells=1)
+    t.refine(Box((1, 1), (3, 3)))
+    # After refinement the middle void is carved out: a query in the void
+    # overlaps no leaf -> the file can be pruned without scanning.
+    assert t.overlapping(Box((20, 20), (30, 30))) == []

@@ -1,0 +1,100 @@
+"""Serving: paged KV cache manager (cost vs LRU), prefix sharing, replica
+placement, and the end-to-end engine."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get, reduced
+from repro.models.model import init_params
+from repro.serve.engine import Request, ServingEngine
+from repro.serve.kvcache import PagedKVCacheManager, _prefix_hashes
+
+
+def mk(policy="cost", pages=8, page_size=4, page_bytes=100):
+    return PagedKVCacheManager(page_size=page_size,
+                               budget_bytes=pages * page_bytes,
+                               page_bytes=page_bytes, policy=policy)
+
+
+def test_prefix_hashes_are_prefix_closed():
+    a = _prefix_hashes([1, 2, 3, 4, 5, 6, 7, 8], 4)
+    b = _prefix_hashes([1, 2, 3, 4, 9, 9, 9, 9], 4)
+    assert a[0] == b[0] and a[1] != b[1]
+
+
+def test_shared_prefix_hits():
+    m = mk()
+    system = list(range(16))
+    r1 = m.allocate(1, system + [100, 101, 102, 103])
+    assert r1.hit_pages == 0
+    r2 = m.allocate(2, system + [200, 201, 202, 203])
+    assert r2.hit_pages == 4          # the shared 16-token prefix
+    assert r2.recompute_tokens == 4
+
+
+def test_miss_inside_prefix_forces_full_recompute():
+    m = mk(pages=4)
+    toks = list(range(32))            # 8 pages, budget 4
+    r = m.allocate(1, toks)
+    assert r.recompute_tokens >= 16   # early pages evicted -> no usable prefix
+    r2 = m.allocate(2, toks)
+    # Whatever is resident, usable prefix stops at the first hole.
+    assert 0 <= r2.recompute_tokens <= 32
+
+
+def test_cost_policy_keeps_hot_system_prompt():
+    """A hot shared prefix + cold one-off requests: cost-based keeps the
+    shared pages; hit rate must beat LRU."""
+    rng = np.random.default_rng(0)
+    system = list(range(24))          # 6 pages
+
+    def run(policy):
+        m = mk(policy=policy, pages=10, page_size=4)
+        hits = 0
+        total = 0
+        for i in range(30):
+            if i % 2 == 0:
+                toks = system + rng.integers(100, 200, 8).tolist()
+            else:    # cold scans that try to flush the cache
+                toks = rng.integers(1000 + 100 * i, 1000 + 100 * i + 99,
+                                    28).tolist()
+            r = m.allocate(i, toks)
+            if i % 2 == 0:
+                hits += r.hit_pages
+                total += len(r.page_ids)
+        return hits / max(total, 1)
+
+    assert run("cost") >= run("lru")
+    assert run("cost") > 0.3
+
+
+def test_replica_placement_colocates_shared_pages():
+    m = mk(pages=16, page_size=4)
+    system = list(range(16))
+    for i in range(4):
+        m.allocate(i, system + [300 + i])
+    loc = m.assign_replica_groups(n_groups=2, group_budget_bytes=1600)
+    shared = _prefix_hashes(system, 4)
+    shared_ids = [m.by_key[k].page_id for k in shared]
+    groups = {loc[p] for p in shared_ids if p in loc}
+    assert len(groups) == 1           # all shared pages on one group
+
+
+def test_engine_end_to_end():
+    cfg = reduced(get("qwen1.5-0.5b"), d_model=32, n_periods=1, vocab=64)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServingEngine(cfg, params, slots=2, max_len=64, page_size=4,
+                           cache_budget_pages=64)
+    system = list(range(1, 13))
+    reqs = [Request(request_id=i, prompt=system + [20 + i],
+                    max_new_tokens=4) for i in range(4)]
+    done = engine.run(reqs)
+    assert len(done) == 4
+    assert all(len(r.generated) == 4 for r in done)
+    st = engine.stats
+    assert st.prefill_saved > 0       # later requests reuse the system pages
+    # Identical prompts decode identical first tokens (batch consistency).
+    reqs2 = [Request(request_id=10 + i, prompt=system + [99],
+                     max_new_tokens=2) for i in range(2)]
+    done2 = engine.run(reqs2)
+    assert done2[0].generated == done2[1].generated

