@@ -1,6 +1,21 @@
-"""Figure 5: query execution time vs cache budget for file_lru / chunk_lru /
-cost-based caching, across PTF-1 (hdf5), PTF-2 (fits), GEO (csv)."""
+"""Figure 5: query execution time vs cache budget for the registered
+caching policies, across PTF-1 (hdf5), PTF-2 (fits), GEO (csv).
+
+CLI knobs (the perf-trajectory harness):
+
+    python -m benchmarks.bench_caching --policy cost,chunk_lru \
+        --batch-size 4 --out BENCH_caching.json
+
+``--policy`` selects any registered policy combos (default: the paper's
+three), ``--batch-size`` routes admission through the coordinator's
+batched planning path, and ``--out`` writes a JSON summary so successive
+PRs can diff the trajectory.
+"""
 from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, Optional, Sequence
 
 from benchmarks.common import (build_geo, build_ptf, cell_anchors,
                                dataset_bytes, make_cluster, timed)
@@ -36,15 +51,18 @@ def _workloads():
     }
 
 
-def run(print_rows: bool = True):
+def run(print_rows: bool = True, policies: Sequence[str] = POLICIES,
+        budget_fractions: Sequence[float] = BUDGET_FRACTIONS,
+        batch_size: Optional[int] = None):
     results = {}
     for wl_name, (catalog, reader, queries) in _workloads().items():
         total = dataset_bytes(catalog)
-        for frac in BUDGET_FRACTIONS:
-            for policy in POLICIES:
+        for frac in budget_fractions:
+            for policy in policies:
                 cluster = make_cluster(catalog, reader, policy,
                                        int(total * frac))
-                executed, us = timed(cluster.run_workload, queries)
+                executed, us = timed(cluster.run_workload, queries,
+                                     batch_size=batch_size)
                 summ = workload_summary(executed)
                 per_query = [e.time_total_s for e in executed]
                 key = (wl_name, frac, policy)
@@ -53,10 +71,14 @@ def run(print_rows: bool = True):
                     print(f"fig5/{wl_name}/b{frac}/{policy},{us:.0f},"
                           f"{summ['total_time_s']:.3f}")
     # Headline derived metric: cost vs baselines at the smallest budget.
+    f = budget_fractions[0]
     for wl_name in ("ptf1_hdf5", "ptf2_fits", "geo_csv"):
-        f = BUDGET_FRACTIONS[0]
+        if (wl_name, f, "cost") not in results:
+            continue
         cost = results[(wl_name, f, "cost")]["summary"]["total_time_s"]
         for base in ("file_lru", "chunk_lru"):
+            if (wl_name, f, base) not in results:
+                continue
             b = results[(wl_name, f, base)]["summary"]["total_time_s"]
             if print_rows:
                 print(f"fig5/{wl_name}/speedup_vs_{base},0,"
@@ -64,5 +86,46 @@ def run(print_rows: bool = True):
     return results
 
 
+def to_json_summary(results: Dict, policies: Sequence[str],
+                    batch_size: Optional[int]) -> Dict:
+    out: Dict = {"benchmark": "bench_caching", "policies": list(policies),
+                 "batch_size": batch_size, "workloads": {}}
+    for (wl, frac, policy), payload in results.items():
+        wl_entry = out["workloads"].setdefault(wl, {})
+        pol_entry = wl_entry.setdefault(policy, {})
+        pol_entry[str(frac)] = {
+            k: payload["summary"][k]
+            for k in ("total_time_s", "scan_time_s", "net_time_s",
+                      "compute_time_s", "opt_time_s", "bytes_scanned",
+                      "files_scanned")}
+    return out
+
+
+def main(argv: Optional[Sequence[str]] = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--policy", default=",".join(POLICIES),
+                    help="comma-separated registered policy combos "
+                         "(e.g. cost,chunk_lru,chunk_lfu)")
+    ap.add_argument("--batch-size", type=int, default=None,
+                    help="admit queries through process_batch in groups "
+                         "of N (default: per-query admission)")
+    ap.add_argument("--budget-frac", default=None,
+                    help="comma-separated budget fractions "
+                         f"(default: {BUDGET_FRACTIONS})")
+    ap.add_argument("--out", default="BENCH_caching.json",
+                    help="JSON summary path ('' disables)")
+    args = ap.parse_args(argv)
+    policies = tuple(p for p in args.policy.split(",") if p)
+    fracs = (tuple(float(f) for f in args.budget_frac.split(","))
+             if args.budget_frac else BUDGET_FRACTIONS)
+    results = run(policies=policies, budget_fractions=fracs,
+                  batch_size=args.batch_size)
+    if args.out:
+        with open(args.out, "w") as fh:
+            json.dump(to_json_summary(results, policies, args.batch_size),
+                      fh, indent=2, sort_keys=True)
+        print(f"wrote {args.out}")
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -1,33 +1,46 @@
-"""Core of the paper: distributed cost-based caching for raw arrays.
+"""Core of the paper: distributed cost-based caching for raw arrays,
+grown into a layered planning engine.
 
-Public API:
+Public API by layer:
   * geometry.Box — integer hyper-rectangles
   * rtree.EvolvingRTree — query-driven chunking (Alg. 1)
-  * eviction.cost_based_eviction — Alg. 2 (+ LRUCache baselines)
+  * chunk_manager.ChunkManager — chunk lifecycle, split remap, size tables
+  * cache_state.CacheState — residency, locations, budget scopes
+  * eviction.cost_based_eviction — Alg. 2 (+ LRU/LFU cache structures)
   * placement.cost_based_placement — Alg. 3 (+ static baseline)
-  * coordinator.CacheCoordinator — the Figure-2 planning pipeline
-  * cluster.RawArrayCluster — simulated shared-nothing execution + cost model
+  * policies — EvictionPolicy/PlacementPolicy protocols + combo registry
+  * coordinator.CacheCoordinator — the Figure-2 pipeline; batched admission
+  * cluster.RawArrayCluster — simulated shared-nothing execution + cost
+    model + numpy/Pallas join executors
   * workload — PTF-1 / PTF-2 / GEO query generators
 """
 from repro.core.geometry import Box, bounding_box, expand
 from repro.core.chunk import Chunk, ChunkMeta, FileMeta
 from repro.core.rtree import EvolvingRTree, RefineStats
-from repro.core.eviction import (LRUCache, Triple, EvictionResult,
+from repro.core.chunk_manager import ChunkManager
+from repro.core.cache_state import CacheState
+from repro.core.eviction import (LFUCache, LRUCache, Triple, EvictionResult,
                                  cost_based_eviction)
 from repro.core.placement import (JoinRecord, PlacementResult,
                                   cost_based_placement, static_placement)
+from repro.core.policies import (POLICIES, POLICY_REGISTRY, PolicySpec,
+                                 register_policy, resolve_policy)
 from repro.core.join_planner import JoinPlan, candidate_pairs, plan_join
 from repro.core.coordinator import (CacheCoordinator, QueryReport,
                                     SimilarityJoinQuery)
-from repro.core.cluster import (CostModel, ExecutedQuery, RawArrayCluster,
+from repro.core.cluster import (CostModel, ExecutedQuery, NumpyJoinExecutor,
+                                PallasJoinExecutor, RawArrayCluster,
                                 count_similar_pairs_np, workload_summary)
 
 __all__ = [
     "Box", "bounding_box", "expand", "Chunk", "ChunkMeta", "FileMeta",
-    "EvolvingRTree", "RefineStats", "LRUCache", "Triple", "EvictionResult",
+    "EvolvingRTree", "RefineStats", "ChunkManager", "CacheState",
+    "LFUCache", "LRUCache", "Triple", "EvictionResult",
     "cost_based_eviction", "JoinRecord", "PlacementResult",
-    "cost_based_placement", "static_placement", "JoinPlan",
-    "candidate_pairs", "plan_join", "CacheCoordinator", "QueryReport",
-    "SimilarityJoinQuery", "CostModel", "ExecutedQuery", "RawArrayCluster",
+    "cost_based_placement", "static_placement", "POLICIES",
+    "POLICY_REGISTRY", "PolicySpec", "register_policy", "resolve_policy",
+    "JoinPlan", "candidate_pairs", "plan_join", "CacheCoordinator",
+    "QueryReport", "SimilarityJoinQuery", "CostModel", "ExecutedQuery",
+    "NumpyJoinExecutor", "PallasJoinExecutor", "RawArrayCluster",
     "count_similar_pairs_np", "workload_summary",
 ]

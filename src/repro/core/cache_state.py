@@ -1,0 +1,85 @@
+"""Layer 2 of the planning engine: cache residency and byte accounting.
+
+``CacheState`` is the single source of truth for *what is cached where*:
+the resident chunk-id set, the chunk -> node location map, and the byte
+budgets the policy layer plans against. Policies mutate it; the
+coordinator and the cluster read it.
+
+``budget_scope`` makes the budget semantics a first-class option:
+
+  * ``"global"`` — the paper's §4.2.1 setting: all cluster memory is one
+    unified pool. Eviction enforces ``sum(bytes) <= B_total`` and
+    placement packs against the aggregate, optimizing location only.
+  * ``"node"``   — per-node hard limits: placement packs each node
+    against ``node_budget_bytes`` and chunks that fit nowhere are
+    dropped from cache. This is the regime of real shared-nothing
+    deployments where a worker cannot borrow a neighbor's DRAM.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Set
+
+BUDGET_SCOPES = ("global", "node")
+
+
+class CacheState:
+    """Residency, locations, and per-node byte accounting."""
+
+    def __init__(self, n_nodes: int, node_budget_bytes: int,
+                 budget_scope: str = "global"):
+        if budget_scope not in BUDGET_SCOPES:
+            raise ValueError(f"unknown budget scope {budget_scope!r}; "
+                             f"expected one of {BUDGET_SCOPES}")
+        self.n_nodes = n_nodes
+        self.node_budget = node_budget_bytes
+        self.budget_scope = budget_scope
+        self.cached: Set[int] = set()            # resident chunk ids
+        self.locations: Dict[int, int] = {}      # cached chunk -> node
+
+    # ------------------------------------------------------------- budgets
+
+    @property
+    def total_budget(self) -> int:
+        return self.node_budget * self.n_nodes
+
+    def placement_budgets(self) -> Dict[int, int]:
+        """Per-node byte budgets handed to the placement policy."""
+        per_node = (self.total_budget if self.budget_scope == "global"
+                    else self.node_budget)
+        return {n: per_node for n in range(self.n_nodes)}
+
+    # ---------------------------------------------------------- accounting
+
+    def cached_bytes(self, chunk_bytes: Dict[int, int]) -> int:
+        """Total resident bytes. Retired (split) ids missing from the size
+        table contribute nothing — their cells live on in the children."""
+        return sum(chunk_bytes.get(cid, 0) for cid in self.cached)
+
+    def bytes_by_node(self, chunk_bytes: Dict[int, int]) -> Dict[int, int]:
+        """Resident bytes per node, from the location map."""
+        out = {n: 0 for n in range(self.n_nodes)}
+        for cid in self.cached:
+            node = self.locations.get(cid)
+            if node is not None:
+                out[node] = out.get(node, 0) + chunk_bytes.get(cid, 0)
+        return out
+
+    # ------------------------------------------------------------ mutation
+
+    def location_of(self, chunk_id: int, default: Optional[int] = None
+                    ) -> Optional[int]:
+        return self.locations.get(chunk_id, default)
+
+    def remap_split(self, parent_id: int, leaf_ids: List[int]) -> None:
+        """A cached chunk was split: children inherit residency and
+        location from the retired parent."""
+        self.cached.discard(parent_id)
+        loc = self.locations.pop(parent_id, None)
+        for cid in leaf_ids:
+            self.cached.add(cid)
+            if loc is not None:
+                self.locations[cid] = loc
+
+    def drop(self, chunk_id: int) -> None:
+        self.cached.discard(chunk_id)
+        self.locations.pop(chunk_id, None)

@@ -14,11 +14,22 @@ net_n = max(bytes_in, bytes_out)/net_bw (full-duplex switch), and
 compute_n = assigned cell-pair work / pair_rate. Defaults follow §4.1:
 125 MB/s disk and network. A TPU-pod profile (PCIe host link + ICI) is
 provided for the framework integration experiments.
+
+Join execution backends (``join_backend``):
+
+  * ``"numpy"``  — the reference executor: one blocked numpy evaluation
+    per chunk pair (``join_fn`` override preserved).
+  * ``"pallas"`` — the batched executor: each node's chunk-pair work is
+    grouped, coordinate sets are padded to the kernel's 128-wide BLOCK,
+    and shape-bucketed pair batches are dispatched to the
+    ``kernels/simjoin`` Pallas kernel (interpret-mode by default, so it
+    runs on CPU CI and compiles on TPU).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Sequence
+from typing import (TYPE_CHECKING, Callable, Dict, List, Optional, Sequence,
+                    Tuple)
 
 import numpy as np
 
@@ -27,7 +38,9 @@ if TYPE_CHECKING:  # duck-typed at runtime to avoid a package cycle
 from repro.arrayio.formats import DECODE_CELLS_PER_SEC
 from repro.core.coordinator import (CacheCoordinator, QueryReport,
                                     SimilarityJoinQuery)
-from repro.core.geometry import Box, points_in_box
+from repro.core.geometry import points_in_box
+
+JOIN_BACKENDS = ("numpy", "pallas")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,6 +83,85 @@ def count_similar_pairs_np(a: np.ndarray, b: np.ndarray, eps: int,
     return total
 
 
+# ---------------------------------------------------------------------------
+# Join executors: per-node grouped chunk-pair work -> match counts.
+# ---------------------------------------------------------------------------
+
+# One unit of join work: (node, a coords, b coords, self-join?).
+JoinTask = Tuple[int, np.ndarray, np.ndarray, bool]
+
+
+class NumpyJoinExecutor:
+    """Reference executor: evaluate each pair independently."""
+
+    def __init__(self, join_fn: Callable[..., int]):
+        self.join_fn = join_fn
+
+    def count_pairs(self, tasks: Sequence[JoinTask], eps: int) -> List[int]:
+        return [self.join_fn(a, b, eps, same) for _, a, b, same in tasks]
+
+
+class PallasJoinExecutor:
+    """Batched executor over the ``kernels/simjoin`` Pallas kernel.
+
+    Each node's chunk-pair tasks are padded to BLOCK and bucketed by
+    padded shape and self-join mode; each bucket is dispatched as ONE
+    stacked kernel call — turning a pair-at-a-time python loop into a
+    handful of jit'd launches per query. Buckets span nodes because the
+    simulator executes every node's work on this one device; a real
+    multi-host backend would key buckets by node as well."""
+
+    def __init__(self, interpret: bool = True):
+        # Imported lazily so the numpy backend never pulls in jax.
+        from repro.kernels.simjoin import ops, simjoin
+        self._ops = ops
+        self._block = simjoin.BLOCK
+        self._sentinel = simjoin.SENTINEL
+        self.interpret = interpret
+
+    def count_pairs(self, tasks: Sequence[JoinTask], eps: int) -> List[int]:
+        import jax.numpy as jnp
+        counts = [0] * len(tasks)
+        buckets: Dict[Tuple[bool, int, int], List[int]] = {}
+        for i in range(len(tasks)):
+            _, a, b, same = tasks[i]
+            if a.shape[0] == 0 or b.shape[0] == 0:
+                continue
+            na = -(-a.shape[0] // self._block) * self._block
+            nb = -(-b.shape[0] // self._block) * self._block
+            buckets.setdefault((same, na, nb), []).append(i)
+        for (same, _, _), idxs in buckets.items():
+            a_stack = np.stack([self._ops.pad_cm_np(tasks[i][1],
+                                                    self._sentinel)
+                                for i in idxs])
+            b_stack = np.stack([self._ops.pad_cm_np(tasks[i][2],
+                                                    -self._sentinel)
+                                for i in idxs])
+            got = self._ops.count_similar_pairs_batch(
+                jnp.asarray(a_stack), jnp.asarray(b_stack), int(eps),
+                bool(same), interpret=self.interpret)
+            for i, c in zip(idxs, np.asarray(got)):
+                counts[i] = int(c)
+        return counts
+
+
+def make_join_executor(backend: str, join_fn: Callable[..., int],
+                       interpret: bool = True):
+    if backend == "numpy":
+        return NumpyJoinExecutor(join_fn)
+    if backend == "pallas":
+        try:
+            return PallasJoinExecutor(interpret=interpret)
+        except ImportError as e:                 # jax not available: degrade
+            import warnings
+            warnings.warn(f"join_backend='pallas' unavailable ({e}); "
+                          f"falling back to the numpy executor",
+                          RuntimeWarning, stacklevel=3)
+            return NumpyJoinExecutor(join_fn)
+    raise ValueError(f"unknown join backend {backend!r}; "
+                     f"known: {JOIN_BACKENDS}")
+
+
 @dataclasses.dataclass
 class ExecutedQuery:
     report: QueryReport
@@ -93,31 +185,36 @@ class RawArrayCluster:
                  placement_mode: str = "dynamic", min_cells: int = 256,
                  cost_model: Optional[CostModel] = None,
                  join_fn: Optional[Callable[..., int]] = None,
-                 execute_joins: bool = True):
+                 execute_joins: bool = True,
+                 join_backend: str = "numpy",
+                 budget_scope: str = "global"):
+        if join_fn is not None and join_backend != "numpy":
+            raise ValueError(
+                "join_fn overrides the join predicate of the numpy "
+                "executor; the pallas backend always runs the L1 simjoin "
+                "kernel — pass one or the other")
         self.catalog = catalog
         self.reader = reader
         self.n_nodes = n_nodes
         self.cost = cost_model or CostModel()
         self.join_fn = join_fn or count_similar_pairs_np
         self.execute_joins = execute_joins
+        self.executor = make_join_executor(join_backend, self.join_fn)
         self.coordinator = CacheCoordinator(
             catalog, reader, n_nodes, node_budget_bytes, policy=policy,
-            placement_mode=placement_mode, min_cells=min_cells)
+            placement_mode=placement_mode, min_cells=min_cells,
+            budget_scope=budget_scope)
 
     # ----------------------------------------------------------- execution
 
     def _queried_coords(self, chunk_id: int, file_id: int,
-                        box: Box) -> np.ndarray:
-        if chunk_id < 0:   # file-granularity unit (file_lru)
-            coords, _ = self.reader.read(file_id)
-        else:
-            tree = self.coordinator.trees[file_id]
-            chunk = tree.get_chunk(chunk_id)
-            coords = tree.coords[chunk.cell_idx]
+                        box) -> np.ndarray:
+        coords = self.coordinator.chunks.chunk_coords(chunk_id, file_id)
         return coords[points_in_box(coords, box)]
 
-    def run_query(self, query: SimilarityJoinQuery) -> ExecutedQuery:
-        report = self.coordinator.process_query(query)
+    def _execute(self, query: SimilarityJoinQuery,
+                 report: QueryReport) -> ExecutedQuery:
+        """Apply the cost model and run the join plan's compute."""
         cm = {c.chunk_id: c for c in report.queried_chunks}
 
         # --- modeled scan phase
@@ -145,8 +242,7 @@ class RawArrayCluster:
         matches: Optional[int] = None
         work_by_node: Dict[int, int] = {}
         if report.join_plan is not None:
-            if self.execute_joins:
-                matches = 0
+            tasks: List[JoinTask] = []
             coords_cache: Dict[int, np.ndarray] = {}
             for (a, b), node in report.join_plan.pair_node.items():
                 for cid in (a, b):
@@ -157,7 +253,9 @@ class RawArrayCluster:
                 work_by_node[node] = (work_by_node.get(node, 0)
                                       + ca.shape[0] * cb.shape[0])
                 if self.execute_joins:
-                    matches += self.join_fn(ca, cb, query.eps, a == b)
+                    tasks.append((node, ca, cb, a == b))
+            if self.execute_joins:
+                matches = sum(self.executor.count_pairs(tasks, query.eps))
         time_compute = (max(work_by_node.values(), default=0)
                         / self.cost.cell_pairs_per_sec)
 
@@ -167,9 +265,26 @@ class RawArrayCluster:
                              time_compute_s=time_compute,
                              time_opt_s=t_opt, matches=matches)
 
-    def run_workload(self, queries: Sequence[SimilarityJoinQuery]
+    def run_query(self, query: SimilarityJoinQuery) -> ExecutedQuery:
+        report = self.coordinator.process_query(query)
+        return self._execute(query, report)
+
+    def run_workload(self, queries: Sequence[SimilarityJoinQuery],
+                     batch_size: Optional[int] = None
                      ) -> List[ExecutedQuery]:
-        return [self.run_query(q) for q in queries]
+        """Run a workload. ``batch_size=N`` admits queries through the
+        coordinator's batched planning path (shared raw-file scans, one
+        eviction/placement round per batch); ``None``/1 preserves the
+        per-query admission of the paper's experiments."""
+        if batch_size is None or batch_size <= 1:
+            return [self.run_query(q) for q in queries]
+        out: List[ExecutedQuery] = []
+        for i in range(0, len(queries), batch_size):
+            batch = list(queries[i:i + batch_size])
+            reports = self.coordinator.process_batch(batch)
+            out.extend(self._execute(q, r)
+                       for q, r in zip(batch, reports))
+        return out
 
 
 def workload_summary(executed: Sequence[ExecutedQuery]) -> Dict[str, float]:

@@ -1,38 +1,47 @@
-"""Cache coordinator: the per-query planning pipeline of Figure 2.
+"""Cache coordinator: the Figure-2 planning pipeline, as thin layers.
 
-For each similarity-join query the coordinator produces four plans:
-  1. chunking refinement (Alg. 1, evolving R-tree per file);
-  2. join execution plan (chunk pair -> node, [63]-style);
-  3. cache eviction plan (Alg. 2, or LRU baselines);
-  4. cache placement plan (Alg. 3, or static baseline).
+For each similarity-join admission batch the coordinator runs:
+
+  1. chunking refinement per query (Alg. 1) — ``ChunkManager``;
+  2. join execution plan per query (chunk pair -> node, [63]-style);
+  3. ONE cache eviction round over the batch (Alg. 2 / LRU / LFU) —
+     ``EvictionPolicy`` from the registry;
+  4. ONE cache placement round (Alg. 3 / static / origin) —
+     ``PlacementPolicy`` from the registry, against ``CacheState``
+     budgets (global pool or per-node hard limits via ``budget_scope``).
 
 The coordinator sees only metadata (bounding boxes, counts, sizes, cache
-content tables) — cell data stays on the nodes (the cluster layer). Policies:
+content tables) — cell data stays on the nodes (the cluster layer).
+``process_query`` is the single-query admission path (a batch of one);
+``process_batch`` amortizes raw-file scans across the batch: a file
+materialized for one query is not rescanned by a later query in the same
+batch, and eviction/placement run once over the union touch set.
 
-  * ``cost``      — the paper's proposal: chunking + Alg. 2 + Alg. 3.
-  * ``chunk_lru`` — chunking + distributed chunk-granularity LRU, chunks stay
-                    at their origin node (no placement).
-  * ``file_lru``  — no chunking: whole files are the cache/join units.
+Policy combos (see ``repro.core.policies``): ``cost``, ``chunk_lru``,
+``file_lru`` reproduce the paper's three configurations; ``cost_static``,
+``chunk_lfu``, ``file_lfu`` are registry-provided extensions.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Set, Tuple
-
-import numpy as np
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Set
 
 if TYPE_CHECKING:  # duck-typed at runtime to avoid a package cycle
     from repro.arrayio.catalog import Catalog, FileReader
-from repro.core.chunk import ChunkMeta, FileMeta
-from repro.core.eviction import LRUCache, Triple, cost_based_eviction
+from repro.core.cache_state import CacheState
+from repro.core.chunk import ChunkMeta
+from repro.core.chunk_manager import ChunkManager
 from repro.core.geometry import Box, points_in_box
 from repro.core.join_planner import JoinPlan, plan_join
-from repro.core.placement import (JoinRecord, PlacementResult,
-                                  cost_based_placement, static_placement)
-from repro.core.rtree import EvolvingRTree, RefineStats
+from repro.core.placement import JoinRecord, PlacementResult
+from repro.core.policies import (EvictionContext, PlacementContext, POLICIES,
+                                 QueryAccess, build_eviction, build_placement,
+                                 resolve_policy)
+from repro.core.rtree import RefineStats
 
-POLICIES = ("cost", "chunk_lru", "file_lru")
+__all__ = ["POLICIES", "SimilarityJoinQuery", "QueryReport",
+           "CacheCoordinator"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,297 +70,266 @@ class QueryReport:
     opt_time_chunking_s: float
     opt_time_evict_place_s: float
     refine_stats: RefineStats
+    batch_size: int = 1
+
+
+@dataclasses.dataclass
+class _QueryPlan:
+    """Per-query planning output, pending the batch eviction/placement."""
+
+    query: SimilarityJoinQuery
+    query_index: int
+    files_considered: int
+    files_pruned: int
+    files_scanned: List[int]
+    scan_bytes_by_node: Dict[int, int]
+    decode_cells_by_node: Dict[int, Dict[str, int]]
+    queried: List[ChunkMeta]
+    queried_cells: int
+    join_plan: JoinPlan
+    opt_time_chunking_s: float
+    refine_stats: RefineStats
+    online_evicted: int = 0
 
 
 class CacheCoordinator:
     def __init__(self, catalog: "Catalog", reader: "FileReader", n_nodes: int,
                  node_budget_bytes: int, policy: str = "cost",
                  placement_mode: str = "dynamic", min_cells: int = 256,
-                 decay: float = 2.0, history_window: int = 64):
-        if policy not in POLICIES:
-            raise ValueError(f"unknown policy {policy!r}")
-        if placement_mode not in ("dynamic", "static"):
-            raise ValueError(f"unknown placement mode {placement_mode!r}")
+                 decay: float = 2.0, history_window: int = 64,
+                 budget_scope: str = "global"):
+        self.spec = resolve_policy(policy, placement_mode)
         self.catalog = catalog
         self.reader = reader
         self.n_nodes = n_nodes
-        self.node_budget = node_budget_bytes
-        self.total_budget = node_budget_bytes * n_nodes
         self.policy = policy
         self.placement_mode = placement_mode
-        self.min_cells = min_cells
         self.decay = decay
         self.history_window = history_window
 
-        self._chunk_counter = 0
-        self.trees: Dict[int, EvolvingRTree] = {}
-        self.chunk_file: Dict[int, int] = {}       # chunk_id -> file_id
-        self.locations: Dict[int, int] = {}        # cached chunk -> node
-        self.cached: Set[int] = set()              # cached chunk ids
-        self.state: List[Triple] = []              # Alg. 2 state S
+        self.chunks = ChunkManager(catalog, reader, min_cells,
+                                   node_budget_bytes)
+        self.cache = CacheState(n_nodes, node_budget_bytes, budget_scope)
+        self.eviction = build_eviction(self.spec, self.cache.total_budget,
+                                       decay, history_window)
+        self.placement = build_placement(self.spec)
         self.join_history: List[JoinRecord] = []   # Alg. 3 workload W
-        self.lru = LRUCache(self.total_budget)     # baselines
         self.query_counter = 0
 
-    # ------------------------------------------------------------ plumbing
+    # ------------------------------------------------- legacy-shaped views
 
-    def _next_chunk_id(self) -> int:
-        self._chunk_counter += 1
-        return self._chunk_counter
+    @property
+    def trees(self):
+        return self.chunks.trees
 
-    def _tree(self, meta: FileMeta) -> EvolvingRTree:
-        tree = self.trees.get(meta.file_id)
-        if tree is None:
-            coords, _ = self.reader.read(meta.file_id)
-            # Cap chunk size at a quarter of one node's budget so placement
-            # can always pack what eviction retains (rtree.py max_cells).
-            max_cells = max(2 * self.min_cells,
-                            self.node_budget // (4 * meta.cell_bytes))
-            tree = EvolvingRTree(meta.file_id, coords, meta.cell_bytes,
-                                 self.min_cells, self._next_chunk_id,
-                                 max_cells=max_cells)
-            self.trees[meta.file_id] = tree
-            self.chunk_file[tree.leaves()[0].chunk_id] = meta.file_id
-        return tree
+    @property
+    def chunk_file(self) -> Dict[int, int]:
+        return self.chunks.chunk_file
 
-    def _descendants(self, chunk_id: int) -> List[int]:
-        fid = self.chunk_file.get(chunk_id)
-        if fid is None:
-            return []
-        return self.trees[fid].descendants(chunk_id)
+    @property
+    def cached(self) -> Set[int]:
+        return self.cache.cached
 
-    def _remap_after_splits(self, tree: EvolvingRTree) -> None:
-        """Propagate split chunk ids through cache bookkeeping: children
-        inherit residency and location from the retired parent."""
-        for cid, children in list(tree.split_children.items()):
-            for ch in children:
-                self.chunk_file.setdefault(ch, tree.file_id)
-            if cid in self.cached:
-                self.cached.discard(cid)
-                loc = self.locations.pop(cid, None)
-                for ch in tree.descendants(cid):
-                    self.cached.add(ch)
-                    if loc is not None:
-                        self.locations[ch] = loc
-            if self.policy == "chunk_lru" and cid in self.lru:
-                loc = self.locations.get(cid)
-                kids = [(ch, tree.get_chunk(ch).nbytes)
-                        for ch in tree.descendants(cid)]
-                self.lru.rename(cid, kids)
+    @property
+    def locations(self) -> Dict[int, int]:
+        return self.cache.locations
+
+    @property
+    def node_budget(self) -> int:
+        return self.cache.node_budget
+
+    @property
+    def total_budget(self) -> int:
+        return self.cache.total_budget
+
+    @property
+    def min_cells(self) -> int:
+        return self.chunks.min_cells
 
     # ------------------------------------------------------------- queries
 
     def process_query(self, query: SimilarityJoinQuery) -> QueryReport:
-        self.query_counter += 1
-        if self.policy == "file_lru":
-            return self._process_file_lru(query)
-        return self._process_chunked(query)
+        return self.process_batch([query])[0]
 
-    # ---- chunked policies (cost, chunk_lru) ----
+    def process_batch(self, queries: Sequence[SimilarityJoinQuery]
+                      ) -> List[QueryReport]:
+        """Admit a batch: per-query chunking + join planning with raw-file
+        scans shared across the batch, then a single eviction/placement
+        round over the union touch set."""
+        if not queries:
+            return []
+        plans: List[_QueryPlan] = []
+        batch_scanned: Set[int] = set()    # files materialized this batch
+        for q in queries:
+            self.query_counter += 1
+            if self.spec.granularity == "file":
+                plans.append(self._plan_file_query(q, self.query_counter))
+            else:
+                plans.append(self._plan_chunked_query(
+                    q, self.query_counter, batch_scanned))
 
-    def _process_chunked(self, query: SimilarityJoinQuery) -> QueryReport:
-        l = self.query_counter
+        t0 = time.perf_counter()
+        chunk_bytes, file_bytes = self.chunks.size_tables()
+        # An early query's chunk may have been split by a later query in
+        # the same batch: remap every access onto the present leaf set
+        # (identity for a batch of one) before the policy rounds.
+        accesses: List[QueryAccess] = []
+        for p in plans:
+            queried_now: List[ChunkMeta] = []
+            by_file_now: Dict[int, List[int]] = {}
+            for cm in p.queried:
+                for u in self.chunks.current_units(cm):
+                    queried_now.append(u)
+                    by_file_now.setdefault(u.file_id, []).append(u.chunk_id)
+            accesses.append(QueryAccess(p.query_index, queried_now,
+                                        by_file_now))
+        deferred_evicted = 0
+        if self.spec.granularity == "chunk":
+            # File units admit online during the scan loop; chunk units
+            # admit here, in one Alg.-2/LRU/LFU round over the batch.
+            deferred_evicted = self.eviction.finalize_batch(EvictionContext(
+                accesses=accesses, chunk_bytes=chunk_bytes,
+                file_bytes=file_bytes, state=self.cache, chunks=self.chunks))
+
+        replicas: Dict[int, Set[int]] = {}
+        for p in plans:
+            for cid, nodes in p.join_plan.replicas.items():
+                replicas.setdefault(cid, set()).update(nodes)
+        placement, extra_bytes = self.placement.place(PlacementContext(
+            replicas=replicas,
+            queried=[cm for acc in accesses for cm in acc.queried],
+            join_history=self.join_history, chunk_bytes=chunk_bytes,
+            node_budgets=self.cache.placement_budgets(), state=self.cache,
+            home_of=self.chunks.home_node, decay=self.decay,
+            history_window=self.history_window))
+        if placement is not None:
+            # Keep the eviction policy's residency view in sync with
+            # placement drops (no-op for cost: triples re-enter as
+            # uncached bytes next round, the seed behavior).
+            for cid in placement.dropped:
+                self.eviction.discard(cid)
+        t_evict_place = time.perf_counter() - t0
+
+        cached_bytes = self.cache.cached_bytes(chunk_bytes)
+        cached_chunks = len(self.cache.cached)
+        reports = []
+        for i, p in enumerate(plans):
+            last = i == len(plans) - 1
+            reports.append(QueryReport(
+                query_index=p.query_index, policy=self.policy,
+                files_considered=p.files_considered,
+                files_pruned=p.files_pruned,
+                files_scanned=p.files_scanned,
+                scan_bytes_by_node=p.scan_bytes_by_node,
+                decode_cells_by_node=p.decode_cells_by_node,
+                queried_chunks=p.queried, queried_cells=p.queried_cells,
+                join_plan=p.join_plan,
+                placement=placement if last else None,
+                placement_extra_bytes=extra_bytes if last else 0,
+                cached_bytes_after=cached_bytes,
+                cached_chunks_after=cached_chunks,
+                evicted_items=p.online_evicted
+                + (deferred_evicted if last else 0),
+                opt_time_chunking_s=p.opt_time_chunking_s,
+                opt_time_evict_place_s=t_evict_place if last else 0.0,
+                refine_stats=p.refine_stats, batch_size=len(plans)))
+        return reports
+
+    # ---- per-query planning: chunk granularity (cost, chunk_lru, ...) ----
+
+    def _plan_chunked_query(self, query: SimilarityJoinQuery, l: int,
+                            batch_scanned: Set[int]) -> _QueryPlan:
         candidates = self.catalog.files_overlapping(query.box)
         scans: List[int] = []
         scan_bytes: Dict[int, int] = {}
         decode_cells: Dict[int, Dict[str, int]] = {}
         queried: List[ChunkMeta] = []
-        queried_by_file: Dict[int, List[int]] = {}
         cells_in_q = 0
         pruned = 0
         t0 = time.perf_counter()
         rstats = RefineStats()
         for meta in candidates:
-            first_touch = meta.file_id not in self.trees
-            tree = self._tree(meta)
+            first_touch = meta.file_id not in self.chunks.trees
+            tree = self.chunks.tree(meta)
             overlapping = tree.overlapping(query.box)
             if not overlapping:
                 pruned += 1           # refined boxes prune the file entirely
                 continue
-            miss = first_touch or any(c.chunk_id not in self.cached
-                                      for c in overlapping)
+            miss = (first_touch
+                    or any(c.chunk_id not in self.cache.cached
+                           for c in overlapping)) \
+                and meta.file_id not in batch_scanned
             chunks = tree.refine(query.box, rstats)
-            self._remap_after_splits(tree)
-            if not chunks:
-                # Overlap was empty space — carved off by the refinement.
-                if miss:
-                    scans.append(meta.file_id)
-                    scan_bytes[meta.node] = (scan_bytes.get(meta.node, 0)
-                                             + meta.file_bytes)
-                    decode_cells.setdefault(meta.node, {}).setdefault(meta.fmt, 0)
-                    decode_cells[meta.node][meta.fmt] += meta.n_cells
-                continue
+            self.chunks.remap_after_splits(tree, self.cache, self.eviction)
             if miss:
                 scans.append(meta.file_id)
+                batch_scanned.add(meta.file_id)
                 scan_bytes[meta.node] = (scan_bytes.get(meta.node, 0)
                                          + meta.file_bytes)
                 decode_cells.setdefault(meta.node, {}).setdefault(meta.fmt, 0)
                 decode_cells[meta.node][meta.fmt] += meta.n_cells
+            if not chunks:
+                # Overlap was empty space — carved off by the refinement.
+                continue
             for c in chunks:
                 cm = ChunkMeta.of(c)
                 queried.append(cm)
-                queried_by_file.setdefault(meta.file_id, []).append(c.chunk_id)
                 cells_in_q += int(points_in_box(
                     tree.coords[c.cell_idx], query.box).sum())
         t_chunking = time.perf_counter() - t0
 
         # Locations at query start: cache location, else home node (the scan
         # just materialized the chunk there).
-        locations = {}
-        for cm in queried:
-            home = self.catalog.by_id(cm.file_id).node
-            locations[cm.chunk_id] = self.locations.get(cm.chunk_id, home)
-
-        jplan = plan_join(queried, locations, 0 if query.eps <= 0 else query.eps,
-                          self.n_nodes)
-        self.join_history.append(
-            JoinRecord(l, tuple(jplan.pairs)))
+        locations = {cm.chunk_id: self.cache.locations.get(
+            cm.chunk_id, self.catalog.by_id(cm.file_id).node)
+            for cm in queried}
+        jplan = plan_join(queried, locations,
+                          0 if query.eps <= 0 else query.eps, self.n_nodes)
+        self.join_history.append(JoinRecord(l, tuple(jplan.pairs)))
         if len(self.join_history) > self.history_window:
             self.join_history = self.join_history[-self.history_window:]
 
-        t1 = time.perf_counter()
-        placement: Optional[PlacementResult] = None
-        extra_bytes = 0
-        evicted_count = 0
-        if self.policy == "cost":
-            chunk_bytes, file_bytes = self._size_tables()
-            current = [Triple(l, fid, frozenset(cids))
-                       for fid, cids in queried_by_file.items()]
-            history = [t.remap(self._descendants) for t in self.state]
-            history = [t for t in history if t.chunk_ids]
-            res = cost_based_eviction(history, current, self.total_budget,
-                                      chunk_bytes, file_bytes, self.decay)
-            evicted_count = len(self.cached - res.cached_chunks)
-            self.state = res.state
-            if len(self.state) > 4 * self.history_window:
-                self.state = sorted(self.state,
-                                    key=lambda t: -t.query_index
-                                    )[:4 * self.history_window]
-            self.cached = res.cached_chunks
-            # Replicas induced by the join, restricted to retained chunks.
-            replicas = {cid: set(nodes)
-                        for cid, nodes in jplan.replicas.items()
-                        if cid in self.cached}
-            for cid in self.cached:
-                if cid not in replicas:
-                    loc = self.locations.get(cid)
-                    if loc is None:
-                        loc = self.catalog.by_id(self.chunk_file[cid]).node
-                    replicas[cid] = {loc}
-            # Global budget semantics, matching the LRU baselines ("all the
-            # memory across the cluster as unified distributed memory",
-            # §4.2.1): eviction already enforced sum <= B, so placement
-            # packs against the aggregate and optimizes location only —
-            # pure piggyback, no forced drops/ships. Per-node hard limits
-            # can be restored via node_budget_bytes in PlacementResult
-            # consumers (the serving engine uses them).
-            budgets = {n: self.total_budget for n in range(self.n_nodes)}
-            if self.placement_mode == "dynamic":
-                placement = cost_based_placement(
-                    self.join_history, replicas, chunk_bytes, budgets,
-                    self.decay, self.history_window)
-            else:
-                home = {cid: self.catalog.by_id(self.chunk_file[cid]).node
-                        for cid in replicas}
-                placement = static_placement(replicas, home, chunk_bytes,
-                                             budgets)
-            for cid in placement.dropped:
-                self.cached.discard(cid)
-            self.locations = dict(placement.locations)
-            extra_bytes = sum(chunk_bytes[c]
-                              for c, _ in placement.fallback_moves)
-        else:  # chunk_lru
-            sizes = self._size_tables()[0]
-            for cm in queried:
-                evicted = self.lru.admit(cm.chunk_id, cm.nbytes)
-                evicted_count += len(evicted)
-                for e in evicted:
-                    self.locations.pop(e, None)
-                self.lru.touch(cm.chunk_id)
-            self.cached = self.lru.ids()
-            for cm in queried:
-                if cm.chunk_id in self.cached:
-                    self.locations.setdefault(
-                        cm.chunk_id, self.catalog.by_id(cm.file_id).node)
-        t_evict_place = time.perf_counter() - t1
+        return _QueryPlan(
+            query=query, query_index=l, files_considered=len(candidates),
+            files_pruned=pruned, files_scanned=scans,
+            scan_bytes_by_node=scan_bytes, decode_cells_by_node=decode_cells,
+            queried=queried, queried_cells=cells_in_q, join_plan=jplan,
+            opt_time_chunking_s=t_chunking, refine_stats=rstats)
 
-        cached_bytes = self._cached_bytes()
-        return QueryReport(
-            query_index=l, policy=self.policy,
-            files_considered=len(candidates), files_pruned=pruned,
-            files_scanned=scans, scan_bytes_by_node=scan_bytes,
-            decode_cells_by_node=decode_cells, queried_chunks=queried,
-            queried_cells=cells_in_q, join_plan=jplan, placement=placement,
-            placement_extra_bytes=extra_bytes,
-            cached_bytes_after=cached_bytes,
-            cached_chunks_after=len(self.cached),
-            evicted_items=evicted_count,
-            opt_time_chunking_s=t_chunking,
-            opt_time_evict_place_s=t_evict_place,
-            refine_stats=rstats)
+    # ---- per-query planning: file granularity (file_lru, file_lfu) ----
 
-    # ---- file_lru baseline ----
-
-    def _process_file_lru(self, query: SimilarityJoinQuery) -> QueryReport:
-        l = self.query_counter
+    def _plan_file_query(self, query: SimilarityJoinQuery,
+                         l: int) -> _QueryPlan:
+        """Whole files as single-chunk units, admitted online: the scan
+        decision consults the live cache, so an admission earlier in the
+        loop can evict (and force a rescan of) a later candidate — the
+        paper's file-LRU baseline semantics."""
         candidates = self.catalog.files_overlapping(query.box)
         scans: List[int] = []
         scan_bytes: Dict[int, int] = {}
         decode_cells: Dict[int, Dict[str, int]] = {}
         queried: List[ChunkMeta] = []
         cells_in_q = 0
-        evicted_count = 0
+        evicted = 0
         for meta in candidates:
-            if meta.file_id not in self.lru:
+            unit = self.chunks.file_unit(meta)
+            if not self.eviction.is_resident(unit.chunk_id):
                 scans.append(meta.file_id)
                 scan_bytes[meta.node] = (scan_bytes.get(meta.node, 0)
                                          + meta.file_bytes)
                 decode_cells.setdefault(meta.node, {}).setdefault(meta.fmt, 0)
                 decode_cells[meta.node][meta.fmt] += meta.n_cells
-            mem_bytes = meta.n_cells * meta.cell_bytes
-            evicted_count += len(self.lru.admit(meta.file_id, mem_bytes))
-            self.lru.touch(meta.file_id)
-            # Whole file acts as one join unit (negative ids: file "chunks").
-            queried.append(ChunkMeta(chunk_id=-(meta.file_id + 1),
-                                     file_id=meta.file_id, box=meta.box,
-                                     n_cells=meta.n_cells, nbytes=mem_bytes))
+            evicted += self.eviction.admit_online(unit, self.cache)
+            queried.append(unit)
             coords, _ = self.reader.read(meta.file_id)
             cells_in_q += int(points_in_box(coords, query.box).sum())
         locations = {cm.chunk_id: self.catalog.by_id(cm.file_id).node
                      for cm in queried}
         jplan = plan_join(queried, locations, query.eps, self.n_nodes)
-        return QueryReport(
-            query_index=l, policy=self.policy,
-            files_considered=len(candidates), files_pruned=0,
-            files_scanned=scans, scan_bytes_by_node=scan_bytes,
-            decode_cells_by_node=decode_cells, queried_chunks=queried,
-            queried_cells=cells_in_q, join_plan=jplan, placement=None,
-            placement_extra_bytes=0,
-            cached_bytes_after=self.lru.used_bytes,
-            cached_chunks_after=len(self.lru.ids()),
-            evicted_items=evicted_count,
-            opt_time_chunking_s=0.0, opt_time_evict_place_s=0.0,
-            refine_stats=RefineStats())
-
-    # ------------------------------------------------------------- helpers
-
-    def _size_tables(self) -> Tuple[Dict[int, int], Dict[int, int]]:
-        chunk_bytes: Dict[int, int] = {}
-        for tree in self.trees.values():
-            for c in tree.leaves():
-                chunk_bytes[c.chunk_id] = c.nbytes
-        file_bytes = {f.file_id: f.file_bytes for f in self.catalog.files}
-        return chunk_bytes, file_bytes
-
-    def _cached_bytes(self) -> int:
-        if self.policy == "chunk_lru":
-            return self.lru.used_bytes
-        total = 0
-        for cid in self.cached:
-            fid = self.chunk_file.get(cid)
-            if fid is None:
-                continue
-            tree = self.trees[fid]
-            if cid in tree._leaves:
-                total += tree.get_chunk(cid).nbytes
-        return total
+        return _QueryPlan(
+            query=query, query_index=l, files_considered=len(candidates),
+            files_pruned=0, files_scanned=scans,
+            scan_bytes_by_node=scan_bytes, decode_cells_by_node=decode_cells,
+            queried=queried, queried_cells=cells_in_q, join_plan=jplan,
+            opt_time_chunking_s=0.0, refine_stats=RefineStats(),
+            online_evicted=evicted)

@@ -200,3 +200,76 @@ class LRUCache:
                     self._items[cid] = cb
             else:
                 self._items[iid] = nb
+
+
+class LFUCache:
+    """Distributed-unified-memory LFU over items with sizes. Victims are
+    the least-frequently-used items, recency-LRU among equal frequencies
+    (the classic LFU tie-break). Same admit/touch/rename surface as
+    ``LRUCache`` so the policy layer can swap them freely."""
+
+    def __init__(self, budget_bytes: int):
+        self.budget = budget_bytes
+        self._bytes: Dict[int, int] = {}
+        self._freq: Dict[int, int] = {}
+        self._clock: Dict[int, int] = {}
+        self._tick = 0
+
+    def __contains__(self, item_id: int) -> bool:
+        return item_id in self._bytes
+
+    @property
+    def used_bytes(self) -> int:
+        return sum(self._bytes.values())
+
+    def ids(self) -> Set[int]:
+        return set(self._bytes.keys())
+
+    def touch(self, item_id: int) -> None:
+        if item_id in self._bytes:
+            self._tick += 1
+            self._freq[item_id] += 1
+            self._clock[item_id] = self._tick
+
+    def admit(self, item_id: int, nbytes: int) -> List[int]:
+        """Insert/refresh an item; returns ids evicted to make room. Items
+        larger than the whole budget are never admitted."""
+        evicted: List[int] = []
+        if nbytes > self.budget:
+            return evicted
+        self._tick += 1
+        if item_id in self._bytes:
+            self._freq[item_id] += 1
+            self._clock[item_id] = self._tick
+            return evicted
+        self._bytes[item_id] = nbytes
+        self._freq[item_id] = 1
+        self._clock[item_id] = self._tick
+        used = self.used_bytes
+        while used > self.budget:
+            victim = min((i for i in self._bytes if i != item_id),
+                         key=lambda i: (self._freq[i], self._clock[i]),
+                         default=None)
+            if victim is None:
+                break
+            used -= self._bytes[victim]
+            self.remove(victim)
+            evicted.append(victim)
+        return evicted
+
+    def remove(self, item_id: int) -> None:
+        self._bytes.pop(item_id, None)
+        self._freq.pop(item_id, None)
+        self._clock.pop(item_id, None)
+
+    def rename(self, old_id: int, new_ids: Iterable[Tuple[int, int]]) -> None:
+        """Replace a split item by its children; children inherit the
+        parent's frequency and clock."""
+        if old_id not in self._bytes:
+            return
+        freq, clock = self._freq[old_id], self._clock[old_id]
+        self.remove(old_id)
+        for cid, cb in new_ids:
+            self._bytes[cid] = cb
+            self._freq[cid] = freq
+            self._clock[cid] = clock

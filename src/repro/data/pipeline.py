@@ -114,14 +114,13 @@ class RawArrayTokenPipeline:
         coord = self.cluster.coordinator
         for cm in rep.queried_chunks:
             all_coords, attrs = self.reader.read(cm.file_id)
-            if cm.chunk_id < 0:        # file-granularity unit (file_lru)
+            idx = coord.chunks.cell_indices(cm.chunk_id, cm.file_id)
+            if idx is None:            # file-granularity unit (file_lru)
                 coords = all_coords
                 chunk_attrs = attrs
             else:
-                tree = coord.trees[cm.file_id]
-                chunk = tree.get_chunk(cm.chunk_id)
-                coords = tree.coords[chunk.cell_idx]
-                chunk_attrs = attrs[chunk.cell_idx]
+                coords = all_coords[idx]
+                chunk_attrs = attrs[idx]
             mask = points_in_box(coords, qbox)
             cc = coords[mask]
             toks = chunk_attrs[mask][:, 0].astype(np.int64)

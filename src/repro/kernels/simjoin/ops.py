@@ -42,3 +42,33 @@ def count_similar_pairs_np(a: np.ndarray, b: np.ndarray, eps: int,
     return int(count_similar_pairs(jnp.asarray(a, jnp.int32),
                                    jnp.asarray(b, jnp.int32), int(eps),
                                    bool(same)))
+
+
+def pad_cm_np(x: np.ndarray, sentinel: int) -> np.ndarray:
+    """Host-side version of ``_pad_cm``: (N, d) int coords -> coordinate-
+    major (d, N_padded) int32 with sentinel fill, N_padded a positive
+    multiple of BLOCK. Used to stack shape-bucketed pair batches before a
+    single device transfer."""
+    n, d = x.shape
+    pad_n = (-n) % BLOCK if n else BLOCK
+    xt = np.ascontiguousarray(x.astype(np.int32, copy=False).T)
+    if pad_n:
+        xt = np.pad(xt, ((0, 0), (0, pad_n)), constant_values=sentinel)
+    return xt
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "same", "interpret"))
+def count_similar_pairs_batch(a_stack: jax.Array, b_stack: jax.Array,
+                              eps: int, same: bool,
+                              interpret: bool = True) -> jax.Array:
+    """Batched pair counting: ``a_stack``/``b_stack`` are (k, d, Na) /
+    (k, d, Nb) coordinate-major stacks (pre-padded to BLOCK multiples with
+    sentinels, e.g. via :func:`pad_cm_np`). Returns (k,) int32 match
+    counts — one kernel dispatch chain per shape bucket instead of one
+    per chunk pair. ``lax.map`` keeps the per-element grid (and thus the
+    self-join ``program_id`` masking) identical to the unbatched call."""
+    def one(ab):
+        a, b = ab
+        return simjoin_block_counts(a, b, eps, same,
+                                    interpret=interpret).sum()
+    return jax.lax.map(one, (a_stack, b_stack)).astype(jnp.int32)

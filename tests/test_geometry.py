@@ -1,6 +1,5 @@
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.geometry import (Box, bounding_box, enclosing, expand,
                                  points_in_box, split_boundaries)
@@ -44,30 +43,3 @@ def test_split_boundaries_faces():
     assert bnds == {(0, 2), (0, 6)}
     # bb inside q -> no face passes through
     assert split_boundaries(q, Box((4, 4), (5, 5))) == []
-
-
-coords_strategy = st.lists(
-    st.tuples(st.integers(0, 50), st.integers(0, 50), st.integers(0, 50)),
-    min_size=1, max_size=200)
-
-
-@given(coords_strategy)
-@settings(max_examples=50, deadline=None)
-def test_bounding_box_is_tight_and_contains_all(pts):
-    arr = np.array(pts, dtype=np.int64)
-    bb = bounding_box(arr)
-    assert points_in_box(arr, bb).all()
-    lo, hi = bb.as_arrays()
-    assert (arr.min(axis=0) == lo).all() and (arr.max(axis=0) == hi).all()
-
-
-@given(coords_strategy, st.integers(0, 5))
-@settings(max_examples=30, deadline=None)
-def test_expand_contains_all_l1_neighbors(pts, eps):
-    arr = np.array(pts, dtype=np.int64)
-    bb = bounding_box(arr)
-    grown = expand(bb, eps)
-    # Any point at L1 distance <= eps from a member is inside the expansion.
-    shifted = arr.copy()
-    shifted[:, 0] += eps
-    assert points_in_box(shifted, grown).all()

@@ -1,0 +1,119 @@
+"""Property-based tests (hypothesis), consolidated from the per-module
+suites so the rest of the suite collects when the ``hypothesis`` dev extra
+is not installed (``pip install -e .[dev]`` provides it)."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.eviction import Triple, cost_based_eviction  # noqa: E402
+from repro.core.geometry import (Box, bounding_box, expand,  # noqa: E402
+                                 points_in_box)
+from repro.core.rtree import EvolvingRTree  # noqa: E402
+
+
+# ------------------------------------------------------------- eviction
+
+def T(l, f, chunks):
+    return Triple(l, f, frozenset(chunks))
+
+
+@given(st.integers(0, 10_000), st.integers(50, 2000))
+@settings(max_examples=40, deadline=None)
+def test_budget_never_exceeded_property(seed, budget):
+    import random
+    rnd = random.Random(seed)
+    chunk_bytes = {i: rnd.randint(10, 200) for i in range(30)}
+    file_bytes = {i: rnd.randint(500, 5000) for i in range(6)}
+    history = []
+    for l in range(1, 12):
+        f = rnd.randrange(6)
+        cs = rnd.sample(range(30), rnd.randint(1, 5))
+        history.append(T(l, f, cs))
+    current = [T(12, 0, rnd.sample(range(30), 3))]
+    res = cost_based_eviction(history, current, budget,
+                              chunk_bytes, file_bytes)
+    used = sum(chunk_bytes[c] for c in res.cached_chunks)
+    current_bytes = sum(chunk_bytes[c] for c in
+                        set().union(*[t.chunk_ids for t in current]))
+    # Current query may overflow on its own; beyond that, budget holds.
+    assert used <= max(budget, current_bytes)
+    for t in res.state:
+        assert t.chunk_ids <= res.cached_chunks
+
+
+# ------------------------------------------------------------- geometry
+
+coords_strategy = st.lists(
+    st.tuples(st.integers(0, 50), st.integers(0, 50), st.integers(0, 50)),
+    min_size=1, max_size=200)
+
+
+@given(coords_strategy)
+@settings(max_examples=50, deadline=None)
+def test_bounding_box_is_tight_and_contains_all(pts):
+    arr = np.array(pts, dtype=np.int64)
+    bb = bounding_box(arr)
+    assert points_in_box(arr, bb).all()
+    lo, hi = bb.as_arrays()
+    assert (arr.min(axis=0) == lo).all() and (arr.max(axis=0) == hi).all()
+
+
+@given(coords_strategy, st.integers(0, 5))
+@settings(max_examples=30, deadline=None)
+def test_expand_contains_all_l1_neighbors(pts, eps):
+    arr = np.array(pts, dtype=np.int64)
+    bb = bounding_box(arr)
+    grown = expand(bb, eps)
+    # Any point at L1 distance <= eps from a member is inside the expansion.
+    shifted = arr.copy()
+    shifted[:, 0] += eps
+    assert points_in_box(shifted, grown).all()
+
+
+# ---------------------------------------------------------------- rtree
+
+def make_tree(coords, min_cells=5):
+    counter = iter(range(1, 1_000_000))
+    return EvolvingRTree(0, np.asarray(coords, dtype=np.int64), 12,
+                         min_cells, lambda: next(counter))
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 40))
+@settings(max_examples=25, deadline=None)
+def test_invariants_under_random_workload(seed, min_cells):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(5, 400))
+    coords = rng.integers(0, 80, size=(n, 2))
+    t = make_tree(coords, min_cells=min_cells)
+    for _ in range(8):
+        lo = rng.integers(0, 70, size=2)
+        hi = lo + rng.integers(1, 25, size=2)
+        q = Box(tuple(int(x) for x in lo), tuple(int(x) for x in hi))
+        got = t.refine(q)
+        t.validate()
+        # Leaves returned are exactly those holding >= 1 queried cell.
+        expect = set()
+        for c in t.leaves():
+            if points_in_box(t.coords[c.cell_idx], q).any():
+                expect.add(c.chunk_id)
+        assert {c.chunk_id for c in got} == expect
+
+
+# -------------------------------------------------------- simjoin kernel
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 80), st.integers(1, 80),
+       st.integers(0, 4))
+@settings(max_examples=20, deadline=None)
+def test_simjoin_property_random(seed, n, m, eps):
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.kernels.simjoin import ops
+    from repro.kernels.simjoin.ref import count_pairs_ref
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 12, size=(n, 2)).astype(np.int32)
+    b = rng.integers(0, 12, size=(m, 2)).astype(np.int32)
+    got = int(ops.count_similar_pairs(jnp.asarray(a), jnp.asarray(b),
+                                      eps, False))
+    want = int(count_pairs_ref(jnp.asarray(a), jnp.asarray(b), eps, False))
+    assert got == want

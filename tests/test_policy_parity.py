@@ -1,0 +1,124 @@
+"""Regression: the layered planning engine reproduces the seed (monolithic)
+coordinator's observable cache behavior exactly.
+
+The EXPECTED table was captured by running the pre-refactor coordinator on
+this fixed-seed workload (dataset seed 21, ptf1 seed 7 + ptf2 seed 5,
+4 nodes, 6 kB/node budget). Per query and policy it freezes:
+
+    [bytes scanned, files scanned, queried cells,
+     cached chunks after, cached bytes after, evicted items, join matches]
+
+Any drift in chunking, scan accounting, eviction, placement, or join
+execution shows up as a diff against these rows.
+"""
+import tempfile
+
+import pytest
+
+from repro.arrayio.catalog import FileReader, build_catalog
+from repro.arrayio.generator import make_ptf_files
+from repro.core.cluster import RawArrayCluster
+from repro.core.workload import ptf1_workload, ptf2_workload
+
+N_NODES = 4
+NODE_BUDGET = 6_000
+
+EXPECTED = {
+    "cost": [
+        [86400, [1, 6, 7], 2, 2, 1856, 0, 0],
+        [86400, [1, 6, 7], 31, 5, 4480, 0, 0],
+        [149760, [0, 1, 5, 7], 0, 5, 4480, 0, 0],
+        [0, [], 0, 5, 4480, 0, 0],
+        [0, [], 0, 5, 4480, 0, 0],
+        [149760, [0, 1, 5, 7], 31, 9, 5472, 0, 1],
+        [149760, [0, 1, 5, 7], 1351, 20, 43232, 5, 101],
+        [48960, [7], 714, 21, 23328, 15, 48],
+    ],
+    "chunk_lru": [
+        [86400, [1, 6, 7], 2, 2, 1856, 0, 0],
+        [86400, [1, 6, 7], 31, 5, 4480, 0, 0],
+        [149760, [0, 1, 5, 7], 0, 5, 4480, 0, 0],
+        [0, [], 0, 5, 4480, 0, 0],
+        [0, [], 0, 5, 4480, 0, 0],
+        [149760, [0, 1, 5, 7], 31, 9, 5472, 0, 1],
+        [149760, [0, 1, 5, 7], 1351, 10, 23296, 17, 101],
+        [149760, [0, 1, 5, 7], 714, 21, 23328, 14, 48],
+    ],
+    "file_lru": [
+        [86400, [1, 6, 7], 2, 1, 18720, 1, 0],
+        [86400, [1, 6, 7], 31, 1, 18720, 2, 0],
+        [172800, [0, 1, 5, 6, 7], 0, 1, 18720, 2, 0],
+        [172800, [0, 1, 5, 6, 7], 0, 1, 18720, 2, 0],
+        [172800, [0, 1, 5, 6, 7], 0, 1, 18720, 2, 0],
+        [172800, [0, 1, 5, 6, 7], 31, 1, 18720, 2, 1],
+        [172800, [0, 1, 5, 6, 7], 1351, 1, 18720, 2, 101],
+        [172800, [0, 1, 5, 6, 7], 714, 1, 18720, 2, 48],
+    ],
+}
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    files = make_ptf_files(n_files=10, cells_per_file_mean=900, seed=21)
+    catalog, data = build_catalog(files, tempfile.mkdtemp(prefix="parity_"),
+                                  "fits", n_nodes=N_NODES)
+    return catalog, data
+
+
+def fixed_workload(catalog):
+    return (ptf1_workload(catalog.domain, n_queries=4, eps=300, seed=7)
+            + ptf2_workload(catalog.domain, n_queries=4, eps=300))
+
+
+def observe(cluster, queries):
+    rows = []
+    for e in cluster.run_workload(queries):
+        r = e.report
+        rows.append([sum(r.scan_bytes_by_node.values()),
+                     sorted(r.files_scanned), r.queried_cells,
+                     r.cached_chunks_after, r.cached_bytes_after,
+                     r.evicted_items, e.matches])
+    return rows
+
+
+@pytest.mark.parametrize("policy", sorted(EXPECTED))
+def test_layered_pipeline_matches_seed_observables(dataset, policy):
+    catalog, data = dataset
+    cluster = RawArrayCluster(catalog, FileReader(catalog, data), N_NODES,
+                              NODE_BUDGET, policy=policy, min_cells=64)
+    assert observe(cluster, fixed_workload(catalog)) == EXPECTED[policy]
+
+
+def test_pallas_batched_executor_matches_numpy(dataset):
+    """The Pallas-batched join executor returns match counts identical to
+    the numpy reference executor on the same admitted plans."""
+    catalog, data = dataset
+    queries = fixed_workload(catalog)
+    matches = {}
+    for backend in ("numpy", "pallas"):
+        cluster = RawArrayCluster(catalog, FileReader(catalog, data),
+                                  N_NODES, NODE_BUDGET, policy="cost",
+                                  min_cells=64, join_backend=backend)
+        matches[backend] = [e.matches
+                            for e in cluster.run_workload(queries)]
+    assert matches["pallas"] == matches["numpy"]
+    assert sum(matches["numpy"]) > 0       # the fixture exercises the join
+
+
+def test_pallas_backend_on_quickstart_workload():
+    """Quickstart-scale cross-check (the acceptance workload): batched
+    Pallas execution and the numpy executor agree query by query."""
+    files = make_ptf_files(n_files=12, cells_per_file_mean=2000, seed=5)
+    catalog, data = build_catalog(files, tempfile.mkdtemp(prefix="qs_"),
+                                  "fits", n_nodes=N_NODES)
+    total = sum(f.n_cells * f.cell_bytes for f in catalog.files)
+    queries = ptf2_workload(catalog.domain, n_queries=10)
+    matches = {}
+    for backend in ("numpy", "pallas"):
+        cluster = RawArrayCluster(catalog, FileReader(catalog, data),
+                                  N_NODES, total // (4 * N_NODES),
+                                  policy="cost", min_cells=128,
+                                  join_backend=backend)
+        matches[backend] = [e.matches
+                            for e in cluster.run_workload(queries)]
+    assert matches["pallas"] == matches["numpy"]

@@ -1,6 +1,5 @@
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.geometry import Box, bounding_box, points_in_box
 from repro.core.rtree import EvolvingRTree, RefineStats
@@ -90,27 +89,6 @@ def test_descendants_after_splits():
     assert set(desc) == {c.chunk_id for c in t.leaves()}
     total = sum(t.get_chunk(d).n_cells for d in desc)
     assert total == 300
-
-
-@given(st.integers(0, 2**31 - 1), st.integers(2, 40))
-@settings(max_examples=25, deadline=None)
-def test_invariants_under_random_workload(seed, min_cells):
-    rng = np.random.default_rng(seed)
-    n = int(rng.integers(5, 400))
-    coords = rng.integers(0, 80, size=(n, 2))
-    t = make_tree(coords, min_cells=min_cells)
-    for _ in range(8):
-        lo = rng.integers(0, 70, size=2)
-        hi = lo + rng.integers(1, 25, size=2)
-        q = Box(tuple(int(x) for x in lo), tuple(int(x) for x in hi))
-        got = t.refine(q)
-        t.validate()
-        # Leaves returned are exactly those holding >= 1 queried cell.
-        expect = set()
-        for c in t.leaves():
-            if points_in_box(t.coords[c.cell_idx], q).any():
-                expect.add(c.chunk_id)
-        assert {c.chunk_id for c in got} == expect
 
 
 def test_pruning_via_overlapping():
