@@ -4,12 +4,14 @@ caching policies, across PTF-1 (hdf5), PTF-2 (fits), GEO (csv).
 CLI knobs (the perf-trajectory harness):
 
     python -m benchmarks.bench_caching --policy cost,chunk_lru \
-        --batch-size 4 --out BENCH_caching.json
+        --batch-size 4 --reuse on --out BENCH_caching.json
 
 ``--policy`` selects any registered policy combos (default: the paper's
 three), ``--batch-size`` routes admission through the coordinator's
-batched planning path, and ``--out`` writes a JSON summary so successive
-PRs can diff the trajectory.
+batched planning path, ``--reuse on`` enables the semantic cache-reuse
+rewrite, and ``--out`` writes a JSON summary — including the resolved
+policy spec and the reuse stats of every run — so successive PRs can
+diff the trajectory.
 """
 from __future__ import annotations
 
@@ -53,20 +55,25 @@ def _workloads():
 
 def run(print_rows: bool = True, policies: Sequence[str] = POLICIES,
         budget_fractions: Sequence[float] = BUDGET_FRACTIONS,
-        batch_size: Optional[int] = None):
+        batch_size: Optional[int] = None, reuse: str = "off"):
     results = {}
     for wl_name, (catalog, reader, queries) in _workloads().items():
         total = dataset_bytes(catalog)
         for frac in budget_fractions:
             for policy in policies:
                 cluster = make_cluster(catalog, reader, policy,
-                                       int(total * frac))
+                                       int(total * frac), reuse=reuse)
                 executed, us = timed(cluster.run_workload, queries,
                                      batch_size=batch_size)
                 summ = workload_summary(executed)
                 per_query = [e.time_total_s for e in executed]
+                spec = cluster.coordinator.spec
                 key = (wl_name, frac, policy)
-                results[key] = {"summary": summ, "per_query": per_query}
+                results[key] = {
+                    "summary": summ, "per_query": per_query,
+                    "policy_spec": {"granularity": spec.granularity,
+                                    "eviction": spec.eviction,
+                                    "placement": spec.placement}}
                 if print_rows:
                     print(f"fig5/{wl_name}/b{frac}/{policy},{us:.0f},"
                           f"{summ['total_time_s']:.3f}")
@@ -87,17 +94,25 @@ def run(print_rows: bool = True, policies: Sequence[str] = POLICIES,
 
 
 def to_json_summary(results: Dict, policies: Sequence[str],
-                    batch_size: Optional[int]) -> Dict:
+                    batch_size: Optional[int],
+                    reuse: str = "off") -> Dict:
+    """Serialize run() results: per (workload, policy, budget fraction)
+    the modeled times, scan volume, the resolved policy spec, and the
+    semantic-reuse counters of that run (the ``reuse`` knob is recorded
+    once, at the top level)."""
     out: Dict = {"benchmark": "bench_caching", "policies": list(policies),
-                 "batch_size": batch_size, "workloads": {}}
+                 "batch_size": batch_size, "reuse": reuse, "workloads": {}}
     for (wl, frac, policy), payload in results.items():
         wl_entry = out["workloads"].setdefault(wl, {})
         pol_entry = wl_entry.setdefault(policy, {})
         pol_entry[str(frac)] = {
-            k: payload["summary"][k]
-            for k in ("total_time_s", "scan_time_s", "net_time_s",
-                      "compute_time_s", "opt_time_s", "bytes_scanned",
-                      "files_scanned")}
+            **{k: payload["summary"][k]
+               for k in ("total_time_s", "scan_time_s", "net_time_s",
+                         "compute_time_s", "opt_time_s", "bytes_scanned",
+                         "files_scanned", "reuse_hits", "reuse_bytes_served",
+                         "residual_bytes_scanned", "reuse_scan_skips")},
+            "policy_spec": payload["policy_spec"],
+        }
     return out
 
 
@@ -109,6 +124,9 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     ap.add_argument("--batch-size", type=int, default=None,
                     help="admit queries through process_batch in groups "
                          "of N (default: per-query admission)")
+    ap.add_argument("--reuse", default="off", choices=("off", "on"),
+                    help="semantic cache reuse: serve covered sub-regions "
+                         "from resident chunks (default: off, seed parity)")
     ap.add_argument("--budget-frac", default=None,
                     help="comma-separated budget fractions "
                          f"(default: {BUDGET_FRACTIONS})")
@@ -119,10 +137,11 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     fracs = (tuple(float(f) for f in args.budget_frac.split(","))
              if args.budget_frac else BUDGET_FRACTIONS)
     results = run(policies=policies, budget_fractions=fracs,
-                  batch_size=args.batch_size)
+                  batch_size=args.batch_size, reuse=args.reuse)
     if args.out:
         with open(args.out, "w") as fh:
-            json.dump(to_json_summary(results, policies, args.batch_size),
+            json.dump(to_json_summary(results, policies, args.batch_size,
+                                      args.reuse),
                       fh, indent=2, sort_keys=True)
         print(f"wrote {args.out}")
 

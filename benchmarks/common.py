@@ -51,7 +51,8 @@ PAPER_DATASET_BYTES = 262e9      # PTF in HDF5 (§4.1)
 
 def make_cluster(catalog, reader, policy: str, budget_total: int,
                  placement: str = "dynamic",
-                 paper_scale: bool = True) -> RawArrayCluster:
+                 paper_scale: bool = True,
+                 reuse: str = "off") -> RawArrayCluster:
     # min_cells keeps refined chunks well below one node's cache budget
     # (the paper's regime: GB-scale node budgets vs MB-scale chunks).
     #
@@ -70,7 +71,7 @@ def make_cluster(catalog, reader, policy: str, budget_total: int,
     return RawArrayCluster(
         catalog, reader, N_NODES, budget_total // N_NODES, policy=policy,
         placement_mode=placement, min_cells=48, cost_model=cm,
-        execute_joins=False)
+        execute_joins=False, reuse=reuse)
 
 
 def dataset_bytes(catalog: Catalog) -> int:

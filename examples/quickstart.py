@@ -55,6 +55,34 @@ def main():
           f"{s['files_scanned']:.0f} files scanned, "
           f"matches q1 = {executed[0].matches}")
 
+    # Semantic cache reuse (reuse="on"): before a query's scan plan is
+    # built, the coordinator rewrites it against the CoverageIndex of
+    # resident chunk extents. Sub-regions covered by cached chunks are
+    # served by slicing those chunks in place (shipping only the sliced
+    # extent); only the residual region takes the catalog/scan path. Run
+    # the same query twice: the first admission scans raw files cold, the
+    # repeat is answered from covering cached chunks.
+    cluster = RawArrayCluster(catalog, reader, N_NODES, budget // N_NODES,
+                              policy="cost", min_cells=128, reuse="on")
+    # Demo on the densest query of the workload (one that touches cells).
+    q = queries[max(range(len(queries)),
+                    key=lambda i: executed[i].report.queried_cells)]
+    first = cluster.run_query(q)
+    second = cluster.run_query(q)
+    b1 = sum(first.report.scan_bytes_by_node.values())
+    b2 = sum(second.report.scan_bytes_by_node.values())
+    print(f"\nsemantic reuse, same query twice:"
+          f"\n  run 1: scanned {b1} B, reuse_hits={first.report.reuse_hits}"
+          f"\n  run 2: scanned {b2} B, reuse_hits={second.report.reuse_hits},"
+          f" served {second.report.reuse_bytes_served} B from cache slices,"
+          f" matches identical = {second.matches == first.matches}")
+    # The example doubles as a smoke test: the repeat must hit the cache,
+    # scan strictly fewer bytes, and return the same answer.
+    assert second.report.reuse_hits > 0
+    assert b2 < b1
+    assert second.matches == first.matches
+    assert cluster.coordinator.stats["reuse_hits"] > 0
+
 
 if __name__ == "__main__":
     main()

@@ -2,10 +2,12 @@
 grown into a layered planning engine.
 
 Public API by layer:
-  * geometry.Box — integer hyper-rectangles
+  * geometry.Box — integer hyper-rectangles (+ box_subtract residuals)
   * rtree.EvolvingRTree — query-driven chunking (Alg. 1)
   * chunk_manager.ChunkManager — chunk lifecycle, split remap, size tables
   * cache_state.CacheState — residency, locations, budget scopes
+  * coverage.CoverageIndex — semantic cache reuse: covered-extent index
+    and query rewrite (covered slices + residual region)
   * eviction.cost_based_eviction — Alg. 2 (+ LRU/LFU cache structures)
   * placement.cost_based_placement — Alg. 3 (+ static baseline)
   * policies — EvictionPolicy/PlacementPolicy protocols + combo registry
@@ -14,11 +16,13 @@ Public API by layer:
     model + numpy/Pallas join executors
   * workload — PTF-1 / PTF-2 / GEO query generators
 """
-from repro.core.geometry import Box, bounding_box, expand
+from repro.core.geometry import (Box, bounding_box, box_subtract, expand,
+                                 residual_boxes)
 from repro.core.chunk import Chunk, ChunkMeta, FileMeta
 from repro.core.rtree import EvolvingRTree, RefineStats
 from repro.core.chunk_manager import ChunkManager
 from repro.core.cache_state import CacheState
+from repro.core.coverage import CoverageIndex, CoveredSlice, QueryRewrite
 from repro.core.eviction import (LFUCache, LRUCache, Triple, EvictionResult,
                                  cost_based_eviction)
 from repro.core.placement import (JoinRecord, PlacementResult,
@@ -33,8 +37,10 @@ from repro.core.cluster import (CostModel, ExecutedQuery, NumpyJoinExecutor,
                                 count_similar_pairs_np, workload_summary)
 
 __all__ = [
-    "Box", "bounding_box", "expand", "Chunk", "ChunkMeta", "FileMeta",
+    "Box", "bounding_box", "box_subtract", "expand", "residual_boxes",
+    "Chunk", "ChunkMeta", "FileMeta",
     "EvolvingRTree", "RefineStats", "ChunkManager", "CacheState",
+    "CoverageIndex", "CoveredSlice", "QueryRewrite",
     "LFUCache", "LRUCache", "Triple", "EvictionResult",
     "cost_based_eviction", "JoinRecord", "PlacementResult",
     "cost_based_placement", "static_placement", "POLICIES",

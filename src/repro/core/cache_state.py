@@ -17,13 +17,23 @@ coordinator and the cluster read it.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Set
+from typing import Callable, Dict, List, Optional, Set
+
+from repro.core.chunk import ChunkMeta
+from repro.core.coverage import CoverageIndex
 
 BUDGET_SCOPES = ("global", "node")
 
 
 class CacheState:
-    """Residency, locations, and per-node byte accounting."""
+    """Residency, locations, and per-node byte accounting.
+
+    Also owns the :class:`~repro.core.coverage.CoverageIndex` over resident
+    chunk extents (the semantic-reuse structure): ``drop`` and
+    ``remap_split`` keep it in sync point-wise, and ``sync_coverage``
+    reconciles it after policy rounds that reassign ``cached`` wholesale
+    (eviction/placement replace the resident set rather than mutating it).
+    """
 
     def __init__(self, n_nodes: int, node_budget_bytes: int,
                  budget_scope: str = "global"):
@@ -35,11 +45,13 @@ class CacheState:
         self.budget_scope = budget_scope
         self.cached: Set[int] = set()            # resident chunk ids
         self.locations: Dict[int, int] = {}      # cached chunk -> node
+        self.coverage = CoverageIndex()          # boxes of resident chunks
 
     # ------------------------------------------------------------- budgets
 
     @property
     def total_budget(self) -> int:
+        """Aggregate cache bytes across the cluster (§4.2.1 unified pool)."""
         return self.node_budget * self.n_nodes
 
     def placement_budgets(self) -> Dict[int, int]:
@@ -68,18 +80,36 @@ class CacheState:
 
     def location_of(self, chunk_id: int, default: Optional[int] = None
                     ) -> Optional[int]:
+        """The node currently holding a cached chunk, else ``default``."""
         return self.locations.get(chunk_id, default)
 
-    def remap_split(self, parent_id: int, leaf_ids: List[int]) -> None:
-        """A cached chunk was split: children inherit residency and
-        location from the retired parent."""
+    def remap_split(self, parent_id: int, leaves: List[ChunkMeta]) -> None:
+        """A cached chunk was split: children inherit residency, location,
+        and coverage-index membership from the retired parent (§3.3 split
+        remapping through historical cache state)."""
         self.cached.discard(parent_id)
         loc = self.locations.pop(parent_id, None)
-        for cid in leaf_ids:
-            self.cached.add(cid)
+        for cm in leaves:
+            self.cached.add(cm.chunk_id)
             if loc is not None:
-                self.locations[cid] = loc
+                self.locations[cm.chunk_id] = loc
+        self.coverage.remap_split(parent_id, leaves)
 
     def drop(self, chunk_id: int) -> None:
+        """Remove a chunk from residency, location, and coverage index."""
         self.cached.discard(chunk_id)
         self.locations.pop(chunk_id, None)
+        self.coverage.remove(chunk_id)
+
+    def sync_coverage(self, meta_of: Callable[[int], Optional[ChunkMeta]]
+                      ) -> None:
+        """Reconcile the coverage index with ``cached`` after a policy
+        round. ``meta_of`` resolves a resident chunk id to its metadata
+        (``ChunkManager.meta_of``); ids it cannot resolve (retired between
+        rounds) are left unindexed and re-enter on the next sync."""
+        for cid in self.coverage.ids() - self.cached:
+            self.coverage.remove(cid)
+        for cid in self.cached - self.coverage.ids():
+            meta = meta_of(cid)
+            if meta is not None:
+                self.coverage.add(meta)

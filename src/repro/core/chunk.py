@@ -48,10 +48,12 @@ class Chunk:
 
     @property
     def n_cells(self) -> int:
+        """Number of cells assigned to this chunk."""
         return int(self.cell_idx.shape[0])
 
     @property
     def nbytes(self) -> int:
+        """In-memory size of the chunk's extracted cells (cache cost)."""
         return self.n_cells * self.cell_bytes
 
     def __hash__(self) -> int:
@@ -77,4 +79,5 @@ class ChunkMeta:
 
     @staticmethod
     def of(c: Chunk) -> "ChunkMeta":
+        """Project a data-bearing ``Chunk`` to its metadata view."""
         return ChunkMeta(c.chunk_id, c.file_id, c.box, c.n_cells, c.nbytes)

@@ -45,6 +45,7 @@ class ChunkManager:
     # ------------------------------------------------------------- id space
 
     def next_chunk_id(self) -> int:
+        """Allocate the next globally-unique (positive) chunk id."""
         self._chunk_counter += 1
         return self._chunk_counter
 
@@ -78,13 +79,17 @@ class ChunkManager:
     def remap_after_splits(self, tree: EvolvingRTree, cache_state,
                            eviction_policy) -> None:
         """Propagate split chunk ids through cache bookkeeping: children
-        inherit residency and location from the retired parent, and the
-        eviction policy's recency/frequency structures are renamed."""
+        inherit residency, location, and coverage-index membership from the
+        retired parent, and the eviction policy's recency/frequency
+        structures are renamed (§3.3 — historical state survives Alg. 1
+        refinement)."""
         for cid, children in list(tree.split_children.items()):
             for ch in children:
                 self.chunk_file.setdefault(ch, tree.file_id)
             if cid in cache_state.cached:
-                cache_state.remap_split(cid, tree.descendants(cid))
+                cache_state.remap_split(
+                    cid, [ChunkMeta.of(tree.get_chunk(d))
+                          for d in tree.descendants(cid)])
             if eviction_policy.tracks(cid):
                 kids = [(ch, tree.get_chunk(ch).nbytes)
                         for ch in tree.descendants(cid)]
@@ -143,6 +148,23 @@ class ChunkManager:
         if ds == [cm.chunk_id]:
             return [cm]
         return [ChunkMeta.of(tree.get_chunk(d)) for d in ds]
+
+    def meta_of(self, chunk_id: int) -> Optional[ChunkMeta]:
+        """Metadata for a *live* unit (tree leaf or file unit), or ``None``
+        for retired/unknown ids — the coverage-index sync's resolver."""
+        fid = self.chunk_file.get(chunk_id)
+        if fid is None:
+            return None
+        unit = self._file_units.get(fid)
+        if unit is not None and unit.chunk_id == chunk_id:
+            return unit
+        tree = self.trees.get(fid)
+        if tree is None:
+            return None
+        try:
+            return ChunkMeta.of(tree.get_chunk(chunk_id))
+        except KeyError:
+            return None
 
     def home_node(self, chunk_id: int) -> int:
         """The node storing the raw file a unit belongs to."""

@@ -45,6 +45,8 @@ JOIN_BACKENDS = ("numpy", "pallas")
 
 @dataclasses.dataclass(frozen=True)
 class CostModel:
+    """Calibrated per-node bandwidths/rates for the §4.1 time model."""
+
     disk_bw: float = 125e6               # B/s  (§4.1: HDD ~ GbE)
     net_bw: float = 125e6                # B/s per node link
     cell_pairs_per_sec: float = 5e8      # join predicate throughput per node
@@ -98,6 +100,7 @@ class NumpyJoinExecutor:
         self.join_fn = join_fn
 
     def count_pairs(self, tasks: Sequence[JoinTask], eps: int) -> List[int]:
+        """Per-task match counts via the (overridable) numpy predicate."""
         return [self.join_fn(a, b, eps, same) for _, a, b, same in tasks]
 
 
@@ -120,6 +123,7 @@ class PallasJoinExecutor:
         self.interpret = interpret
 
     def count_pairs(self, tasks: Sequence[JoinTask], eps: int) -> List[int]:
+        """Per-task match counts via bucketed batched kernel dispatch."""
         import jax.numpy as jnp
         counts = [0] * len(tasks)
         buckets: Dict[Tuple[bool, int, int], List[int]] = {}
@@ -147,6 +151,8 @@ class PallasJoinExecutor:
 
 def make_join_executor(backend: str, join_fn: Callable[..., int],
                        interpret: bool = True):
+    """Build a join executor for ``backend``, degrading pallas -> numpy
+    with a warning when jax is unavailable."""
     if backend == "numpy":
         return NumpyJoinExecutor(join_fn)
     if backend == "pallas":
@@ -164,6 +170,9 @@ def make_join_executor(backend: str, join_fn: Callable[..., int],
 
 @dataclasses.dataclass
 class ExecutedQuery:
+    """A query's planning report plus its modeled phase times and the
+    (really computed) join match count."""
+
     report: QueryReport
     time_scan_s: float
     time_net_s: float
@@ -173,6 +182,7 @@ class ExecutedQuery:
 
     @property
     def time_total_s(self) -> float:
+        """Modeled end-to-end latency: scan + net + compute + opt (§4.1)."""
         return (self.time_scan_s + self.time_net_s + self.time_compute_s
                 + self.time_opt_s)
 
@@ -187,7 +197,8 @@ class RawArrayCluster:
                  join_fn: Optional[Callable[..., int]] = None,
                  execute_joins: bool = True,
                  join_backend: str = "numpy",
-                 budget_scope: str = "global"):
+                 budget_scope: str = "global",
+                 reuse: str = "off"):
         if join_fn is not None and join_backend != "numpy":
             raise ValueError(
                 "join_fn overrides the join predicate of the numpy "
@@ -203,7 +214,7 @@ class RawArrayCluster:
         self.coordinator = CacheCoordinator(
             catalog, reader, n_nodes, node_budget_bytes, policy=policy,
             placement_mode=placement_mode, min_cells=min_cells,
-            budget_scope=budget_scope)
+            budget_scope=budget_scope, reuse=reuse)
 
     # ----------------------------------------------------------- execution
 
@@ -241,6 +252,11 @@ class RawArrayCluster:
         # --- join execution (real compute over queried cells)
         matches: Optional[int] = None
         work_by_node: Dict[int, int] = {}
+        # Semantic-reuse fast path: a pair with an empty sliced side can
+        # contribute no matches — skip the executor dispatch entirely.
+        # Gated on the reuse knob so a custom ``join_fn`` still sees every
+        # pair under the seed-parity configuration.
+        skip_empty = self.coordinator.reuse == "on"
         if report.join_plan is not None:
             tasks: List[JoinTask] = []
             coords_cache: Dict[int, np.ndarray] = {}
@@ -252,6 +268,8 @@ class RawArrayCluster:
                 ca, cb = coords_cache[a], coords_cache[b]
                 work_by_node[node] = (work_by_node.get(node, 0)
                                       + ca.shape[0] * cb.shape[0])
+                if skip_empty and (ca.shape[0] == 0 or cb.shape[0] == 0):
+                    continue
                 if self.execute_joins:
                     tasks.append((node, ca, cb, a == b))
             if self.execute_joins:
@@ -266,6 +284,7 @@ class RawArrayCluster:
                              time_opt_s=t_opt, matches=matches)
 
     def run_query(self, query: SimilarityJoinQuery) -> ExecutedQuery:
+        """Admit one query through the coordinator and execute its plan."""
         report = self.coordinator.process_query(query)
         return self._execute(query, report)
 
@@ -288,6 +307,8 @@ class RawArrayCluster:
 
 
 def workload_summary(executed: Sequence[ExecutedQuery]) -> Dict[str, float]:
+    """Aggregate modeled times, scan volume, and semantic-reuse counters
+    over an executed workload (the quantities the benchmarks report)."""
     return {
         "total_time_s": sum(e.time_total_s for e in executed),
         "scan_time_s": sum(e.time_scan_s for e in executed),
@@ -299,4 +320,11 @@ def workload_summary(executed: Sequence[ExecutedQuery]) -> Dict[str, float]:
         "files_scanned": float(sum(len(e.report.files_scanned)
                                    for e in executed)),
         "queries": float(len(executed)),
+        "reuse_hits": float(sum(e.report.reuse_hits for e in executed)),
+        "reuse_bytes_served": float(sum(e.report.reuse_bytes_served
+                                        for e in executed)),
+        "residual_bytes_scanned": float(sum(e.report.residual_bytes_scanned
+                                            for e in executed)),
+        "reuse_scan_skips": float(sum(e.report.reuse_scan_skips
+                                      for e in executed)),
     }

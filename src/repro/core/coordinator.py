@@ -32,6 +32,7 @@ if TYPE_CHECKING:  # duck-typed at runtime to avoid a package cycle
 from repro.core.cache_state import CacheState
 from repro.core.chunk import ChunkMeta
 from repro.core.chunk_manager import ChunkManager
+from repro.core.coverage import QueryRewrite
 from repro.core.geometry import Box, points_in_box
 from repro.core.join_planner import JoinPlan, plan_join
 from repro.core.placement import JoinRecord, PlacementResult
@@ -40,18 +41,29 @@ from repro.core.policies import (EvictionContext, PlacementContext, POLICIES,
                                  resolve_policy)
 from repro.core.rtree import RefineStats
 
-__all__ = ["POLICIES", "SimilarityJoinQuery", "QueryReport",
+__all__ = ["POLICIES", "REUSE_MODES", "SimilarityJoinQuery", "QueryReport",
            "CacheCoordinator"]
+
+# Semantic cache reuse knob: "off" preserves the seed pipeline exactly
+# (every query goes through the catalog/scan path, whole chunks ship);
+# "on" consults the CoverageIndex before a query's scan plan is built.
+REUSE_MODES = ("off", "on")
 
 
 @dataclasses.dataclass(frozen=True)
 class SimilarityJoinQuery:
+    """A similarity self-join over the cells inside ``box`` (§2.2): count
+    unordered L1-neighbor pairs within radius ``eps``."""
+
     box: Box
     eps: int = 1
 
 
 @dataclasses.dataclass
 class QueryReport:
+    """Per-query planning observables (the quantities Figures 5-8 plot,
+    plus the semantic-reuse counters added by the CoverageIndex layer)."""
+
     query_index: int
     policy: str
     files_considered: int
@@ -71,6 +83,12 @@ class QueryReport:
     opt_time_evict_place_s: float
     refine_stats: RefineStats
     batch_size: int = 1
+    # Semantic-reuse observables (all zero when the reuse knob is "off").
+    reuse_hits: int = 0                 # cached chunks served by slicing
+    reuse_bytes_served: int = 0         # sliced extent bytes from cache
+    residual_bytes_scanned: int = 0     # raw bytes the residual path scanned
+    reuse_scan_skips: int = 0           # file scans avoided by containment
+    reuse_fully_covered: bool = False   # box-level residual was empty
 
 
 @dataclasses.dataclass
@@ -90,14 +108,36 @@ class _QueryPlan:
     opt_time_chunking_s: float
     refine_stats: RefineStats
     online_evicted: int = 0
+    rewrite: Optional[QueryRewrite] = None
+    reuse_hits: int = 0
+    reuse_bytes_served: int = 0
+    reuse_scan_skips: int = 0
 
 
 class CacheCoordinator:
+    """The Figure-2 planning pipeline as a thin conductor over the layers.
+
+    ``process_query`` admits a batch of one; ``process_batch`` shares
+    raw-file scans across a batch and runs one eviction/placement round.
+    ``reuse="on"`` enables the semantic cache-reuse rewrite: before a
+    query's scan plan is built the coordinator consults the
+    ``CacheState.coverage`` index, serves covered sub-regions from
+    resident chunks sliced in place (shipping only the sliced extent), and
+    sends only the residual region down the catalog/scan path — a file
+    scan is skipped when every actually-queried cell of that file lives in
+    a covering cached chunk (box-level prune + cell-exact containment
+    test). ``reuse="off"`` (default) preserves seed-exact behavior.
+    Cumulative reuse counters live in :attr:`stats`.
+    """
+
     def __init__(self, catalog: "Catalog", reader: "FileReader", n_nodes: int,
                  node_budget_bytes: int, policy: str = "cost",
                  placement_mode: str = "dynamic", min_cells: int = 256,
                  decay: float = 2.0, history_window: int = 64,
-                 budget_scope: str = "global"):
+                 budget_scope: str = "global", reuse: str = "off"):
+        if reuse not in REUSE_MODES:
+            raise ValueError(f"unknown reuse mode {reuse!r}; "
+                             f"expected one of {REUSE_MODES}")
         self.spec = resolve_policy(policy, placement_mode)
         self.catalog = catalog
         self.reader = reader
@@ -106,6 +146,7 @@ class CacheCoordinator:
         self.placement_mode = placement_mode
         self.decay = decay
         self.history_window = history_window
+        self.reuse = reuse
 
         self.chunks = ChunkManager(catalog, reader, min_cells,
                                    node_budget_bytes)
@@ -115,40 +156,56 @@ class CacheCoordinator:
         self.placement = build_placement(self.spec)
         self.join_history: List[JoinRecord] = []   # Alg. 3 workload W
         self.query_counter = 0
+        # Cumulative semantic-reuse counters (bench_caching surfaces them).
+        self.stats: Dict[str, int] = {
+            "reuse_hits": 0, "reuse_bytes_served": 0,
+            "residual_bytes_scanned": 0, "reuse_scan_skips": 0,
+            "reuse_fully_covered_queries": 0,
+        }
 
     # ------------------------------------------------- legacy-shaped views
 
     @property
     def trees(self):
+        """Per-file evolving R-trees (seed-API view of ChunkManager)."""
         return self.chunks.trees
 
     @property
     def chunk_file(self) -> Dict[int, int]:
+        """chunk id -> owning file id (seed-API view of ChunkManager)."""
         return self.chunks.chunk_file
 
     @property
     def cached(self) -> Set[int]:
+        """Resident chunk-id set (seed-API view of CacheState)."""
         return self.cache.cached
 
     @property
     def locations(self) -> Dict[int, int]:
+        """Cached chunk -> node map (seed-API view of CacheState)."""
         return self.cache.locations
 
     @property
     def node_budget(self) -> int:
+        """Per-node cache budget in bytes (seed-API view of CacheState)."""
         return self.cache.node_budget
 
     @property
     def total_budget(self) -> int:
+        """Aggregate cache budget in bytes (seed-API view of CacheState)."""
         return self.cache.total_budget
 
     @property
     def min_cells(self) -> int:
+        """Alg. 1 minimum chunk population (seed-API view)."""
         return self.chunks.min_cells
 
     # ------------------------------------------------------------- queries
 
     def process_query(self, query: SimilarityJoinQuery) -> QueryReport:
+        """Admit one query (a batch of one): the paper's per-query
+        admission path, including the semantic-reuse rewrite when the
+        ``reuse`` knob is on."""
         return self.process_batch([query])[0]
 
     def process_batch(self, queries: Sequence[SimilarityJoinQuery]
@@ -210,6 +267,19 @@ class CacheCoordinator:
                 self.eviction.discard(cid)
         t_evict_place = time.perf_counter() - t0
 
+        if self.reuse == "on":
+            # Policy rounds reassign the resident set wholesale; reconcile
+            # the coverage index so the next batch's rewrite sees it.
+            self.cache.sync_coverage(self.chunks.meta_of)
+            for p in plans:
+                self.stats["reuse_hits"] += p.reuse_hits
+                self.stats["reuse_bytes_served"] += p.reuse_bytes_served
+                self.stats["residual_bytes_scanned"] += \
+                    sum(p.scan_bytes_by_node.values())
+                self.stats["reuse_scan_skips"] += p.reuse_scan_skips
+                if p.rewrite is not None and p.rewrite.fully_covered:
+                    self.stats["reuse_fully_covered_queries"] += 1
+
         cached_bytes = self.cache.cached_bytes(chunk_bytes)
         cached_chunks = len(self.cache.cached)
         reports = []
@@ -232,20 +302,40 @@ class CacheCoordinator:
                 + (deferred_evicted if last else 0),
                 opt_time_chunking_s=p.opt_time_chunking_s,
                 opt_time_evict_place_s=t_evict_place if last else 0.0,
-                refine_stats=p.refine_stats, batch_size=len(plans)))
+                refine_stats=p.refine_stats, batch_size=len(plans),
+                reuse_hits=p.reuse_hits,
+                reuse_bytes_served=p.reuse_bytes_served,
+                residual_bytes_scanned=(
+                    sum(p.scan_bytes_by_node.values())
+                    if self.reuse == "on" else 0),
+                reuse_scan_skips=p.reuse_scan_skips,
+                reuse_fully_covered=(p.rewrite is not None
+                                     and p.rewrite.fully_covered)))
         return reports
 
     # ---- per-query planning: chunk granularity (cost, chunk_lru, ...) ----
 
     def _plan_chunked_query(self, query: SimilarityJoinQuery, l: int,
                             batch_scanned: Set[int]) -> _QueryPlan:
+        """Plan one chunk-granularity query: semantic-reuse rewrite (when
+        enabled), Alg.-1 refinement, scan accounting, and join planning."""
+        reuse_on = self.reuse == "on"
+        # Semantic rewrite, BEFORE the scan plan is built: covered slices
+        # (cached chunks overlapping the query, sliced to it) plus the
+        # residual region left after subtracting their boxes.
+        rewrite = (self.cache.coverage.rewrite(query.box)
+                   if reuse_on else None)
         candidates = self.catalog.files_overlapping(query.box)
         scans: List[int] = []
         scan_bytes: Dict[int, int] = {}
         decode_cells: Dict[int, Dict[str, int]] = {}
         queried: List[ChunkMeta] = []
+        ship_bytes: Dict[int, int] = {}
         cells_in_q = 0
         pruned = 0
+        reuse_hits = 0
+        reuse_bytes = 0
+        scan_skips = 0
         t0 = time.perf_counter()
         rstats = RefineStats()
         for meta in candidates:
@@ -255,10 +345,23 @@ class CacheCoordinator:
             if not overlapping:
                 pruned += 1           # refined boxes prune the file entirely
                 continue
-            miss = (first_touch
-                    or any(c.chunk_id not in self.cache.cached
-                           for c in overlapping)) \
-                and meta.file_id not in batch_scanned
+            stale = [c for c in overlapping
+                     if c.chunk_id not in self.cache.cached]
+            needs_scan = first_touch or bool(stale)
+            if reuse_on and stale and not first_touch:
+                # Box overlap alone does not force a rescan: leaf boxes are
+                # tight, so the file's queried cells are exactly those of
+                # its leaves inside the query. If every stale (uncached)
+                # leaf holds no queried cell, the query region of this file
+                # is covered by cached chunks (plus provably-empty space)
+                # and the scan is skipped — the cell-exact containment
+                # test behind the CoverageIndex's box-level rewrite.
+                needs_scan = any(
+                    points_in_box(tree.coords[c.cell_idx], query.box).any()
+                    for c in stale)
+                if not needs_scan:
+                    scan_skips += 1
+            miss = needs_scan and meta.file_id not in batch_scanned
             chunks = tree.refine(query.box, rstats)
             self.chunks.remap_after_splits(tree, self.cache, self.eviction)
             if miss:
@@ -274,8 +377,19 @@ class CacheCoordinator:
             for c in chunks:
                 cm = ChunkMeta.of(c)
                 queried.append(cm)
-                cells_in_q += int(points_in_box(
+                n_in_q = int(points_in_box(
                     tree.coords[c.cell_idx], query.box).sum())
+                cells_in_q += n_in_q
+                if reuse_on and cm.chunk_id in self.cache.coverage:
+                    # Covering cached chunk (the CoverageIndex is the
+                    # slice-serving source of truth; split remaps keep it
+                    # live mid-query): its owner slices the queried extent
+                    # in place and the join ships only the slice.
+                    sliced = n_in_q * (cm.nbytes // max(cm.n_cells, 1))
+                    ship_bytes[cm.chunk_id] = sliced
+                    if sliced > 0:
+                        reuse_hits += 1
+                        reuse_bytes += sliced
         t_chunking = time.perf_counter() - t0
 
         # Locations at query start: cache location, else home node (the scan
@@ -284,7 +398,8 @@ class CacheCoordinator:
             cm.chunk_id, self.catalog.by_id(cm.file_id).node)
             for cm in queried}
         jplan = plan_join(queried, locations,
-                          0 if query.eps <= 0 else query.eps, self.n_nodes)
+                          0 if query.eps <= 0 else query.eps, self.n_nodes,
+                          ship_bytes=ship_bytes or None)
         self.join_history.append(JoinRecord(l, tuple(jplan.pairs)))
         if len(self.join_history) > self.history_window:
             self.join_history = self.join_history[-self.history_window:]
@@ -294,7 +409,9 @@ class CacheCoordinator:
             files_pruned=pruned, files_scanned=scans,
             scan_bytes_by_node=scan_bytes, decode_cells_by_node=decode_cells,
             queried=queried, queried_cells=cells_in_q, join_plan=jplan,
-            opt_time_chunking_s=t_chunking, refine_stats=rstats)
+            opt_time_chunking_s=t_chunking, refine_stats=rstats,
+            rewrite=rewrite, reuse_hits=reuse_hits,
+            reuse_bytes_served=reuse_bytes, reuse_scan_skips=scan_skips)
 
     # ---- per-query planning: file granularity (file_lru, file_lfu) ----
 
@@ -303,17 +420,29 @@ class CacheCoordinator:
         """Whole files as single-chunk units, admitted online: the scan
         decision consults the live cache, so an admission earlier in the
         loop can evict (and force a rescan of) a later candidate — the
-        paper's file-LRU baseline semantics."""
+        paper's file-LRU baseline semantics.
+
+        With ``reuse="on"``, resident file units covering part of the query
+        are sliced in place for the join (shipping only the sliced extent);
+        scans are never skipped here — whole-file units carry no finer
+        extent metadata to run the containment test against."""
+        reuse_on = self.reuse == "on"
+        rewrite = (self.cache.coverage.rewrite(query.box)
+                   if reuse_on else None)
         candidates = self.catalog.files_overlapping(query.box)
         scans: List[int] = []
         scan_bytes: Dict[int, int] = {}
         decode_cells: Dict[int, Dict[str, int]] = {}
         queried: List[ChunkMeta] = []
+        ship_bytes: Dict[int, int] = {}
         cells_in_q = 0
         evicted = 0
+        reuse_hits = 0
+        reuse_bytes = 0
         for meta in candidates:
             unit = self.chunks.file_unit(meta)
-            if not self.eviction.is_resident(unit.chunk_id):
+            resident = self.eviction.is_resident(unit.chunk_id)
+            if not resident:
                 scans.append(meta.file_id)
                 scan_bytes[meta.node] = (scan_bytes.get(meta.node, 0)
                                          + meta.file_bytes)
@@ -322,14 +451,23 @@ class CacheCoordinator:
             evicted += self.eviction.admit_online(unit, self.cache)
             queried.append(unit)
             coords, _ = self.reader.read(meta.file_id)
-            cells_in_q += int(points_in_box(coords, query.box).sum())
+            n_in_q = int(points_in_box(coords, query.box).sum())
+            cells_in_q += n_in_q
+            if reuse_on and resident:
+                sliced = n_in_q * meta.cell_bytes
+                ship_bytes[unit.chunk_id] = sliced
+                if sliced > 0:       # a 0-cell slice reuses nothing
+                    reuse_hits += 1
+                    reuse_bytes += sliced
         locations = {cm.chunk_id: self.catalog.by_id(cm.file_id).node
                      for cm in queried}
-        jplan = plan_join(queried, locations, query.eps, self.n_nodes)
+        jplan = plan_join(queried, locations, query.eps, self.n_nodes,
+                          ship_bytes=ship_bytes or None)
         return _QueryPlan(
             query=query, query_index=l, files_considered=len(candidates),
             files_pruned=0, files_scanned=scans,
             scan_bytes_by_node=scan_bytes, decode_cells_by_node=decode_cells,
             queried=queried, queried_cells=cells_in_q, join_plan=jplan,
             opt_time_chunking_s=0.0, refine_stats=RefineStats(),
-            online_evicted=evicted)
+            online_evicted=evicted, rewrite=rewrite, reuse_hits=reuse_hits,
+            reuse_bytes_served=reuse_bytes)

@@ -42,6 +42,8 @@ class Triple:
 
 @dataclasses.dataclass
 class EvictionResult:
+    """Output of one Alg.-2 round: the new state S' and retained chunks."""
+
     state: List[Triple]            # the retained triples S'
     cached_chunks: Set[int]        # union of chunk ids across S'
     kept_from_history: int
@@ -153,12 +155,15 @@ class LRUCache:
 
     @property
     def used_bytes(self) -> int:
+        """Total bytes of resident items."""
         return sum(self._items.values())
 
     def ids(self) -> Set[int]:
+        """The resident item-id set."""
         return set(self._items.keys())
 
     def touch(self, item_id: int) -> None:
+        """Mark an item most-recently-used (no-op when absent)."""
         if item_id in self._items:
             self._items.move_to_end(item_id)
 
@@ -185,6 +190,7 @@ class LRUCache:
         return evicted
 
     def remove(self, item_id: int) -> None:
+        """Forget an item without counting it as an eviction."""
         self._items.pop(item_id, None)
 
     def rename(self, old_id: int, new_ids: Iterable[Tuple[int, int]]) -> None:
@@ -220,12 +226,15 @@ class LFUCache:
 
     @property
     def used_bytes(self) -> int:
+        """Total bytes of resident items."""
         return sum(self._bytes.values())
 
     def ids(self) -> Set[int]:
+        """The resident item-id set."""
         return set(self._bytes.keys())
 
     def touch(self, item_id: int) -> None:
+        """Bump an item's frequency and recency clock (no-op when absent)."""
         if item_id in self._bytes:
             self._tick += 1
             self._freq[item_id] += 1
@@ -258,6 +267,7 @@ class LFUCache:
         return evicted
 
     def remove(self, item_id: int) -> None:
+        """Forget an item without counting it as an eviction."""
         self._bytes.pop(item_id, None)
         self._freq.pop(item_id, None)
         self._clock.pop(item_id, None)

@@ -30,6 +30,7 @@ class Box:
 
     @property
     def ndim(self) -> int:
+        """Dimensionality of the array domain (§2.1: d dimensions)."""
         return len(self.lo)
 
     def volume(self) -> int:
@@ -40,20 +41,26 @@ class Box:
         return v
 
     def side(self, k: int) -> int:
+        """Extent (cell count) along dimension ``k``."""
         return self.hi[k] - self.lo[k] + 1
 
     def contains_point(self, p: Sequence[int]) -> bool:
+        """Closed-interval membership test for one coordinate."""
         return all(l <= x <= h for l, x, h in zip(self.lo, p, self.hi))
 
     def contains_box(self, other: "Box") -> bool:
+        """True when ``other`` lies entirely inside this box."""
         return all(sl <= ol and oh <= sh for sl, sh, ol, oh in
                    zip(self.lo, self.hi, other.lo, other.hi))
 
     def overlaps(self, other: "Box") -> bool:
+        """True when the boxes share at least one integer cell (closed
+        intervals: touching faces count as overlap)."""
         return all(sl <= oh and ol <= sh for sl, sh, ol, oh in
                    zip(self.lo, self.hi, other.lo, other.hi))
 
     def intersection(self, other: "Box") -> Optional["Box"]:
+        """The shared sub-box, or ``None`` when the boxes are disjoint."""
         lo = tuple(max(a, b) for a, b in zip(self.lo, other.lo))
         hi = tuple(min(a, b) for a, b in zip(self.hi, other.hi))
         if any(l > h for l, h in zip(lo, hi)):
@@ -61,10 +68,12 @@ class Box:
         return Box(lo, hi)
 
     def union_bb(self, other: "Box") -> "Box":
+        """Smallest box enclosing both boxes (R-tree node union)."""
         return Box(tuple(min(a, b) for a, b in zip(self.lo, other.lo)),
                    tuple(max(a, b) for a, b in zip(self.hi, other.hi)))
 
     def as_arrays(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(lo, hi) corners as int64 numpy vectors for bulk point tests."""
         return np.asarray(self.lo, dtype=np.int64), np.asarray(self.hi, dtype=np.int64)
 
 
@@ -101,10 +110,61 @@ def expand(box: Box, radius: int, domain: Optional[Box] = None) -> Box:
 
 
 def enclosing(boxes: Iterable[Box]) -> Optional[Box]:
+    """Smallest box enclosing every box in ``boxes`` (``None`` if empty)."""
     out: Optional[Box] = None
     for b in boxes:
         out = b if out is None else out.union_bb(b)
     return out
+
+
+def box_subtract(a: Box, b: Box) -> "list[Box]":
+    """Decompose ``a \\ b`` into disjoint residual boxes (slab decomposition).
+
+    Peels one axis-aligned slab per face of ``b`` that cuts through ``a``,
+    producing at most ``2 * ndim`` pairwise-disjoint boxes whose union is
+    exactly the cells of ``a`` outside ``b``. Returns ``[a]`` when the boxes
+    do not overlap and ``[]`` when ``b`` fully covers ``a`` (exact fit
+    included — boxes are closed, so touching-but-not-overlapping neighbors
+    share no cells and subtraction leaves ``a`` intact). This is the
+    residual-region primitive of the semantic cache-reuse rewrite
+    (multi-query optimization a la Michiardi et al., PAPERS.md).
+    """
+    inter = a.intersection(b)
+    if inter is None:
+        return [a]
+    out: list[Box] = []
+    lo = list(a.lo)
+    hi = list(a.hi)
+    for k in range(a.ndim):
+        if lo[k] < inter.lo[k]:
+            slab_hi = list(hi)
+            slab_hi[k] = inter.lo[k] - 1
+            out.append(Box(tuple(lo), tuple(slab_hi)))
+        if inter.hi[k] < hi[k]:
+            slab_lo = list(lo)
+            slab_lo[k] = inter.hi[k] + 1
+            out.append(Box(tuple(slab_lo), tuple(hi)))
+        # Shrink the working box to b's extent along k; remaining slabs are
+        # carved from dimensions > k only, keeping the pieces disjoint.
+        lo[k], hi[k] = inter.lo[k], inter.hi[k]
+    return out
+
+
+def residual_boxes(box: Box, covers: Iterable[Box]) -> "list[Box]":
+    """The part of ``box`` not covered by any box in ``covers``, as a list
+    of disjoint boxes.
+
+    Iteratively subtracts each cover from the current residual set
+    (worst-case output grows with cover count; cached-extent cover sets are
+    small — a query overlaps few resident chunks). An empty result means
+    ``covers`` fully covers ``box``: the fully-answerable-from-cache test
+    of the semantic reuse layer."""
+    residual = [box]
+    for cover in covers:
+        if not residual:
+            return residual
+        residual = [piece for r in residual for piece in box_subtract(r, cover)]
+    return residual
 
 
 def split_boundaries(query: Box, bb: Box) -> list:

@@ -23,6 +23,9 @@ from repro.core.geometry import Box, expand
 
 @dataclasses.dataclass
 class JoinPlan:
+    """A query's join execution plan: pair assignments, transfers, and
+    the per-node byte/compute loads the §4.1 cost model charges."""
+
     pairs: List[Tuple[int, int]]                 # candidate chunk-id pairs
     pair_node: Dict[Tuple[int, int], int]        # pair -> executing node
     transfers: List[Tuple[int, int]]             # (chunk_id, dest node)
@@ -51,11 +54,20 @@ def candidate_pairs(chunks: Sequence[ChunkMeta], eps: int,
 def plan_join(chunks: Sequence[ChunkMeta],
               locations: Dict[int, int],
               eps: int,
-              n_nodes: int) -> JoinPlan:
+              n_nodes: int,
+              ship_bytes: Optional[Dict[int, int]] = None) -> JoinPlan:
     """Assign candidate pairs to nodes. ``locations[c]`` is where chunk ``c``
     is resident when the query starts (cache location, or the home node right
-    after a raw scan)."""
+    after a raw scan).
+
+    ``ship_bytes`` optionally overrides the per-chunk transfer cost: the
+    semantic-reuse layer charges a covering cached chunk only for the
+    extent sliced to the query region (cells inside the query box), not the
+    whole chunk — the owning node slices in place and ships the slice."""
     meta = {c.chunk_id: c for c in chunks}
+    wire = {c.chunk_id: c.nbytes for c in chunks}
+    if ship_bytes:
+        wire.update((cid, b) for cid, b in ship_bytes.items() if cid in wire)
     pairs = candidate_pairs(chunks, eps)
     # Order pairs by decreasing work so the balance heuristic sees the big
     # rocks first (classic LPT scheduling).
@@ -80,9 +92,9 @@ def plan_join(chunks: Sequence[ChunkMeta],
         for n in range(n_nodes):
             ship = 0
             if a not in node_has[n]:
-                ship += ca.nbytes
+                ship += wire[a]
             if b not in node_has[n] and a != b:
-                ship += cb.nbytes
+                ship += wire[b]
             # Cost: bytes shipped, with a balance penalty proportional to the
             # node's projected overload (keeps the plan from piling compute
             # on the chunk-rich node).
@@ -98,8 +110,8 @@ def plan_join(chunks: Sequence[ChunkMeta],
                 src = locations[cid]
                 node_has[n].add(cid)
                 transfers.append((cid, n))
-                bytes_in[n] += meta[cid].nbytes
-                bytes_out[src] += meta[cid].nbytes
+                bytes_in[n] += wire[cid]
+                bytes_out[src] += wire[cid]
 
     replicas: Dict[int, Set[int]] = {}
     for cid in meta:

@@ -30,6 +30,9 @@ class JoinRecord:
 
 @dataclasses.dataclass
 class PlacementResult:
+    """Output of one placement round: final locations, paid fallback
+    transfers, and chunks dropped for lack of budget (Alg. 3)."""
+
     locations: Dict[int, int]          # chunk_id -> node
     fallback_moves: List[Tuple[int, int]]   # (chunk_id, node) paid transfers
     dropped: List[int]                 # chunks that fit nowhere

@@ -58,6 +58,8 @@ class QueryAccess:
 
 @dataclasses.dataclass
 class EvictionContext:
+    """Everything an eviction round may consult (Alg. 2 inputs)."""
+
     accesses: List[QueryAccess]               # the admission batch, in order
     chunk_bytes: Dict[int, int]
     file_bytes: Dict[int, int]
@@ -67,6 +69,8 @@ class EvictionContext:
 
 @dataclasses.dataclass
 class PlacementContext:
+    """Everything a placement round may consult (Alg. 3 inputs)."""
+
     replicas: Dict[int, Set[int]]             # cached chunk -> holder nodes
     queried: List[ChunkMeta]                  # batch accesses, in order
     join_history: List[JoinRecord]
@@ -125,6 +129,7 @@ class PlacementPolicy(Protocol):
 
     def place(self, ctx: PlacementContext
               ) -> Tuple[Optional[PlacementResult], int]:
+        """Run one placement round over the resident set."""
         ...
 
 
@@ -149,6 +154,7 @@ class CostEviction:
         self.state: List[Triple] = []         # Alg. 2 state S
 
     def finalize_batch(self, ctx: EvictionContext) -> int:
+        """One Alg.-2 greedy-keep round over the admission batch."""
         def triples(acc: QueryAccess) -> List[Triple]:
             return [Triple(acc.query_index, fid, frozenset(cids))
                     for fid, cids in acc.queried_by_file.items()]
@@ -170,23 +176,27 @@ class CostEviction:
         return evicted
 
     def admit_online(self, unit: ChunkMeta, state: "CacheState") -> int:
+        """Unsupported: cost eviction has no online file-unit path."""
         raise NotImplementedError(
             "cost-based eviction plans over chunk triples; it has no online "
             "file-unit admission path")
 
     def is_resident(self, chunk_id: int) -> bool:
+        """Unsupported: residency lives in ``CacheState`` for this policy."""
         raise NotImplementedError
 
     def tracks(self, chunk_id: int) -> bool:
+        """Always False: triples remap lazily in ``finalize_batch``."""
         return False                # triples remap lazily in finalize_batch
 
     def on_split(self, parent_id: int,
                  children: List[Tuple[int, int]]) -> None:
+        """No-op — see :meth:`tracks`."""
         pass
 
     def discard(self, chunk_id: int) -> None:
-        # Triples keep the id; it re-enters as uncached bytes in the next
-        # round's cost computation (the seed coordinator's behavior).
+        """No-op: triples keep the id; it re-enters as uncached bytes in
+        the next round's cost computation (the seed behavior)."""
         pass
 
 
@@ -232,6 +242,8 @@ class _RecencyFrequencyEviction:
 
 
 class LRUEviction(_RecencyFrequencyEviction):
+    """The paper's §4.1 LRU baseline over file or chunk units."""
+
     name = "lru"
 
     def __init__(self, total_budget: int, decay: float, history_window: int):
@@ -239,6 +251,8 @@ class LRUEviction(_RecencyFrequencyEviction):
 
 
 class LFUEviction(_RecencyFrequencyEviction):
+    """Registry extension: LFU eviction with LRU tie-breaking."""
+
     name = "lfu"
 
     def __init__(self, total_budget: int, decay: float, history_window: int):
@@ -269,6 +283,7 @@ class CostPlacement:
 
     def place(self, ctx: PlacementContext
               ) -> Tuple[Optional[PlacementResult], int]:
+        """One Alg.-3 consolidation round; returns (result, paid bytes)."""
         replicas = _default_replicas(ctx)
         result = cost_based_placement(ctx.join_history, replicas,
                                       ctx.chunk_bytes, ctx.node_budgets,
@@ -287,6 +302,7 @@ class StaticPlacement:
 
     def place(self, ctx: PlacementContext
               ) -> Tuple[Optional[PlacementResult], int]:
+        """Pack every resident chunk at its home node (§4.2.4)."""
         replicas = _default_replicas(ctx)
         home = {cid: ctx.home_of(cid) for cid in replicas}
         result = static_placement(replicas, home, ctx.chunk_bytes,
@@ -309,6 +325,7 @@ class OriginPlacement:
 
     def place(self, ctx: PlacementContext
               ) -> Tuple[Optional[PlacementResult], int]:
+        """Record home-node locations; pack per node under node scope."""
         if ctx.state.budget_scope == "node":
             replicas = {cid: {ctx.home_of(cid)} for cid in ctx.state.cached}
             home = {cid: ctx.home_of(cid) for cid in replicas}
@@ -357,6 +374,7 @@ class PolicySpec:
     placement: str                   # PLACEMENT_REGISTRY key
 
     def validate(self) -> None:
+        """Reject unknown keys and invalid granularity/eviction pairings."""
         if self.granularity not in GRANULARITIES:
             raise ValueError(f"unknown granularity {self.granularity!r}")
         if self.eviction not in EVICTION_REGISTRY:
@@ -376,6 +394,7 @@ POLICY_REGISTRY: Dict[str, PolicySpec] = {}
 
 
 def register_policy(spec: PolicySpec) -> PolicySpec:
+    """Validate and install a policy combo under ``spec.name``."""
     spec.validate()
     POLICY_REGISTRY[spec.name] = spec
     return spec
@@ -409,9 +428,11 @@ def resolve_policy(name: str, placement_mode: str = "dynamic") -> PolicySpec:
 
 def build_eviction(spec: PolicySpec, total_budget: int, decay: float,
                    history_window: int) -> EvictionPolicy:
+    """Construct the eviction policy named by ``spec.eviction``."""
     return EVICTION_REGISTRY[spec.eviction](total_budget, decay,
                                             history_window)
 
 
 def build_placement(spec: PolicySpec) -> PlacementPolicy:
+    """Construct the placement policy named by ``spec.placement``."""
     return PLACEMENT_REGISTRY[spec.placement]()

@@ -38,6 +38,8 @@ class _Node:
 
 @dataclasses.dataclass
 class RefineStats:
+    """Counters for one Alg.-1 refinement pass (optimization-time cost)."""
+
     splits: int = 0
     leaves_visited: int = 0
     cells_partitioned: int = 0
@@ -77,15 +79,19 @@ class EvolvingRTree:
 
     @property
     def root_box(self) -> Box:
+        """Bounding box of the whole file (the tree's root)."""
         return self._root.box
 
     def leaves(self) -> List[Chunk]:
+        """The current chunks (live leaves) of the file."""
         return [n.chunk for n in self._leaves.values()]  # type: ignore[misc]
 
     def n_leaves(self) -> int:
+        """Number of live leaves (current chunk count)."""
         return len(self._leaves)
 
     def get_chunk(self, chunk_id: int) -> Chunk:
+        """The live leaf chunk with this id (KeyError when retired)."""
         return self._leaves[chunk_id].chunk  # type: ignore[return-value]
 
     def descendants(self, chunk_id: int) -> List[int]:

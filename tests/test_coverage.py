@@ -1,0 +1,187 @@
+"""Geometry decomposition and CoverageIndex unit tests.
+
+Covers the box-subtraction edge cases the semantic-reuse rewrite leans on
+(0/1/2k residual boxes, exact fit, touching-but-not-overlapping) and the
+coverage-index consistency invariants across admit/evict/split-remap.
+"""
+import tempfile
+
+import pytest
+
+from repro.arrayio.catalog import FileReader, build_catalog
+from repro.arrayio.generator import make_ptf_files
+from repro.core.chunk import ChunkMeta
+from repro.core.cluster import RawArrayCluster
+from repro.core.coverage import CoverageIndex
+from repro.core.geometry import Box, box_subtract, residual_boxes
+from repro.core.workload import ptf2_workload
+
+
+# ---------------------------------------------------------- box_subtract
+
+def total_volume(boxes):
+    return sum(b.volume() for b in boxes)
+
+
+def pairwise_disjoint(boxes):
+    return all(not a.overlaps(b)
+               for i, a in enumerate(boxes) for b in boxes[i + 1:])
+
+
+def test_subtract_disjoint_returns_original():
+    a = Box((0, 0), (9, 9))
+    b = Box((20, 20), (30, 30))
+    assert box_subtract(a, b) == [a]
+
+
+def test_subtract_touching_but_not_overlapping_returns_original():
+    a = Box((0, 0), (9, 9))
+    # Closed integer boxes: [10, 20] shares no cell with [0, 9].
+    b = Box((10, 0), (20, 9))
+    assert box_subtract(a, b) == [a]
+
+
+def test_subtract_exact_fit_produces_zero_residuals():
+    a = Box((3, 4), (8, 9))
+    assert box_subtract(a, a) == []
+
+
+def test_subtract_cover_superset_produces_zero_residuals():
+    a = Box((3, 4), (8, 9))
+    b = Box((0, 0), (100, 100))
+    assert box_subtract(a, b) == []
+
+
+def test_subtract_half_produces_one_residual():
+    a = Box((0,), (9,))
+    b = Box((5,), (9,))
+    assert box_subtract(a, b) == [Box((0,), (4,))]
+
+
+def test_subtract_strict_interior_produces_2k_residuals():
+    # b strictly inside a along every one of k dimensions -> 2k slabs.
+    for k in (1, 2, 3):
+        a = Box((0,) * k, (9,) * k)
+        b = Box((3,) * k, (6,) * k)
+        out = box_subtract(a, b)
+        assert len(out) == 2 * k
+        assert pairwise_disjoint(out)
+        assert total_volume(out) == a.volume() - b.volume()
+        assert all(a.contains_box(piece) for piece in out)
+        assert all(not piece.overlaps(b) for piece in out)
+
+
+def test_subtract_corner_overlap_volume_conserved():
+    a = Box((0, 0), (9, 9))
+    b = Box((5, 5), (14, 14))
+    out = box_subtract(a, b)
+    inter = a.intersection(b)
+    assert pairwise_disjoint(out)
+    assert total_volume(out) == a.volume() - inter.volume()
+
+
+# --------------------------------------------------------- residual_boxes
+
+def test_residual_composes_to_full_coverage():
+    q = Box((0, 0), (9, 9))
+    covers = [Box((0, 0), (9, 4)), Box((0, 5), (4, 9)), Box((5, 5), (9, 9))]
+    assert residual_boxes(q, covers) == []
+
+
+def test_residual_partial_coverage_is_disjoint_and_exact():
+    q = Box((0, 0), (9, 9))
+    covers = [Box((0, 0), (3, 9)), Box((6, 0), (9, 9))]
+    out = residual_boxes(q, covers)
+    assert pairwise_disjoint(out)
+    assert total_volume(out) == q.volume() - sum(c.volume() for c in covers)
+    for piece in out:
+        assert q.contains_box(piece)
+        assert all(not piece.overlaps(c) for c in covers)
+
+
+def test_residual_no_covers_returns_query():
+    q = Box((0, 0), (9, 9))
+    assert residual_boxes(q, []) == [q]
+
+
+# ---------------------------------------------------------- CoverageIndex
+
+def CM(cid, fid, lo, hi, n_cells=10, nbytes=100):
+    return ChunkMeta(cid, fid, Box(lo, hi), n_cells, nbytes)
+
+
+def test_index_add_remove_overlapping():
+    idx = CoverageIndex()
+    idx.add(CM(1, 0, (0, 0), (9, 9)))
+    idx.add(CM(2, 0, (20, 20), (29, 29)))
+    idx.add(CM(3, 1, (5, 5), (14, 14)))
+    assert len(idx) == 3 and 1 in idx
+    got = [m.chunk_id for m in idx.overlapping(Box((8, 8), (10, 10)))]
+    assert got == [1, 3]
+    idx.remove(1)
+    assert 1 not in idx
+    got = [m.chunk_id for m in idx.overlapping(Box((8, 8), (10, 10)))]
+    assert got == [3]
+    idx.remove(1)                       # idempotent on unknown ids
+    assert len(idx) == 2
+
+
+def test_index_file_level_prune_recomputes_after_removal():
+    idx = CoverageIndex()
+    idx.add(CM(1, 0, (0, 0), (9, 9)))
+    idx.add(CM(2, 0, (100, 100), (109, 109)))
+    # File bb spans both chunks; removing the far one must shrink it so the
+    # probe near it no longer reaches file 0's entries.
+    idx.remove(2)
+    assert idx.overlapping(Box((100, 100), (109, 109))) == []
+    assert [m.chunk_id for m in idx.overlapping(Box((0, 0), (1, 1)))] == [1]
+
+
+def test_index_rewrite_covered_and_residual():
+    idx = CoverageIndex()
+    idx.add(CM(1, 0, (0, 0), (9, 9)))
+    rw = idx.rewrite(Box((5, 5), (14, 14)))
+    assert [s.chunk_id for s in rw.covered] == [1]
+    assert rw.covered[0].box == Box((5, 5), (9, 9))
+    assert not rw.fully_covered
+    assert pairwise_disjoint(rw.residual)
+    assert total_volume(rw.residual) == 10 * 10 - 5 * 5
+    # Full coverage -> empty residual.
+    rw2 = idx.rewrite(Box((2, 2), (7, 7)))
+    assert rw2.fully_covered and rw2.covered_chunk_ids() == {1}
+
+
+def test_index_remap_split_children_inherit_coverage():
+    idx = CoverageIndex()
+    idx.add(CM(1, 0, (0, 0), (9, 9)))
+    idx.remap_split(1, [CM(2, 0, (0, 0), (4, 9)), CM(3, 0, (5, 0), (9, 9))])
+    assert 1 not in idx and 2 in idx and 3 in idx
+    assert idx.rewrite(Box((0, 0), (9, 9))).fully_covered
+    # Remapping an unindexed parent is a no-op (uncached chunk split).
+    idx.remap_split(99, [CM(4, 2, (0, 0), (1, 1))])
+    assert 4 not in idx
+
+
+# ------------------------------------- consistency through the real engine
+
+@pytest.mark.parametrize("policy", ["cost", "chunk_lru", "file_lru"])
+def test_coverage_index_tracks_residency_across_evict_and_split(policy):
+    """After every admission batch the coverage index holds exactly the
+    resident units (eviction pressure forces drops, Alg.-1 refinement
+    forces split remaps), with the boxes of the live units."""
+    files = make_ptf_files(n_files=8, cells_per_file_mean=800, seed=3)
+    catalog, data = build_catalog(files, tempfile.mkdtemp(prefix="cov_"),
+                                  "fits", n_nodes=4)
+    cluster = RawArrayCluster(catalog, FileReader(catalog, data), 4, 6_000,
+                              policy=policy, min_cells=64, reuse="on")
+    coord = cluster.coordinator
+    for q in ptf2_workload(catalog.domain, n_queries=6, eps=300):
+        cluster.run_query(q)
+        live = {cid for cid in coord.cache.cached
+                if coord.chunks.meta_of(cid) is not None}
+        assert coord.cache.coverage.ids() == live
+        for cid in live:
+            meta = coord.chunks.meta_of(cid)
+            hits = [m for m in coord.cache.coverage.overlapping(meta.box)
+                    if m.chunk_id == cid]
+            assert len(hits) == 1 and hits[0].box == meta.box

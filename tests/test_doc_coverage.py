@@ -1,0 +1,29 @@
+"""Doc-coverage gate: every public class/function in ``src/repro/core``
+must carry a docstring (>= 90% aggregate), enforced by the stdlib
+``tools/check_docstrings.py`` checker (an ``interrogate`` equivalent that
+needs no extra dependency). CI runs the same command standalone."""
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def test_core_doc_coverage_gate():
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_docstrings.py"),
+         str(REPO / "src" / "repro" / "core"), "--fail-under", "90"],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "PASSED" in proc.stdout
+
+
+def test_checker_flags_missing_docstrings(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text('"""Module documented."""\n\n\ndef public():\n    pass\n')
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_docstrings.py"),
+         str(bad), "--fail-under", "90"],
+        capture_output=True, text=True)
+    assert proc.returncode == 1
+    assert "MISSING" in proc.stdout and "public" in proc.stdout

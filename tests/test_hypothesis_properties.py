@@ -8,8 +8,8 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.eviction import Triple, cost_based_eviction  # noqa: E402
-from repro.core.geometry import (Box, bounding_box, expand,  # noqa: E402
-                                 points_in_box)
+from repro.core.geometry import (Box, bounding_box, box_subtract,  # noqa: E402
+                                 expand, points_in_box, residual_boxes)
 from repro.core.rtree import EvolvingRTree  # noqa: E402
 
 
@@ -70,6 +70,44 @@ def test_expand_contains_all_l1_neighbors(pts, eps):
     shifted = arr.copy()
     shifted[:, 0] += eps
     assert points_in_box(shifted, grown).all()
+
+
+box_strategy = st.builds(
+    lambda lo, side: Box(tuple(lo), tuple(l + s for l, s in zip(lo, side))),
+    st.tuples(st.integers(0, 40), st.integers(0, 40), st.integers(0, 40)),
+    st.tuples(st.integers(0, 30), st.integers(0, 30), st.integers(0, 30)))
+
+
+@given(box_strategy, box_strategy)
+@settings(max_examples=60, deadline=None)
+def test_box_subtract_partitions_exactly(a, b):
+    """The residual pieces of a \\ b are disjoint, inside a, outside b,
+    and conserve volume — the semantic-reuse decomposition invariant."""
+    pieces = box_subtract(a, b)
+    inter = a.intersection(b)
+    assert len(pieces) <= 2 * a.ndim
+    assert sum(p.volume() for p in pieces) == \
+        a.volume() - (inter.volume() if inter else 0)
+    for i, p in enumerate(pieces):
+        assert a.contains_box(p)
+        assert not p.overlaps(b)
+        for q in pieces[i + 1:]:
+            assert not p.overlaps(q)
+
+
+@given(box_strategy, st.lists(box_strategy, max_size=4))
+@settings(max_examples=40, deadline=None)
+def test_residual_boxes_cover_exactly_the_uncovered_cells(q, covers):
+    """Every integer cell of the query is either inside some cover or in
+    exactly one residual box."""
+    residual = residual_boxes(q, covers)
+    rng = np.random.default_rng(0)
+    pts = np.stack([rng.integers(lo, hi + 1, size=64)
+                    for lo, hi in zip(q.lo, q.hi)], axis=1)
+    for p in pts:
+        covered = any(c.contains_point(p) for c in covers)
+        in_residual = sum(r.contains_point(p) for r in residual)
+        assert in_residual == (0 if covered else 1)
 
 
 # ---------------------------------------------------------------- rtree

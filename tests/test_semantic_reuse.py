@@ -1,0 +1,213 @@
+"""Semantic cache reuse: rewrite correctness and scan-byte savings.
+
+Acceptance invariants for the reuse layer:
+
+  * with ``reuse="on"``, a repeated/overlapping workload returns answers
+    (match counts) identical to the reuse-off path while scanning strictly
+    fewer raw bytes;
+  * ``reuse="off"`` is the default and leaves every reuse counter at zero
+    (seed parity itself is pinned by ``tests/test_policy_parity.py``);
+  * covered sub-regions are served by slicing resident chunks in place,
+    shipping only the sliced extent.
+"""
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.arrayio.catalog import FileReader, build_catalog
+from repro.arrayio.generator import GeneratedFile, make_ptf_files
+from repro.core.cluster import RawArrayCluster, workload_summary
+from repro.core.coordinator import SimilarityJoinQuery
+from repro.core.geometry import Box, bounding_box
+from repro.core.workload import ptf2_workload
+
+N_NODES = 4
+
+
+def handcrafted_dataset(tmp_prefix="reuse_"):
+    """One file: a dense 10x10 block at the origin plus two far outliers
+    whose tight bounding box still overlaps queries near the block. A
+    second disjoint file keeps the catalog non-trivial."""
+    dense = np.array([(x, y) for x in range(10) for y in range(10)],
+                     dtype=np.int64)
+    outliers = np.array([(15, 50), (50, 15)], dtype=np.int64)
+    coords0 = np.concatenate([dense, outliers])
+    coords1 = np.array([(x, y) for x in range(80, 90)
+                        for y in range(80, 90)], dtype=np.int64)
+    files = []
+    for coords in (coords0, coords1):
+        attrs = np.zeros((coords.shape[0], 1), dtype=np.float32)
+        files.append(GeneratedFile(coords, attrs, bounding_box(coords)))
+    return build_catalog(files, tempfile.mkdtemp(prefix=tmp_prefix),
+                         "fits", n_nodes=N_NODES)
+
+
+def make_cluster(catalog, data, reuse, policy="cost", budget=10**7,
+                 min_cells=8):
+    return RawArrayCluster(catalog, FileReader(catalog, data), N_NODES,
+                           budget, policy=policy, min_cells=min_cells,
+                           reuse=reuse)
+
+
+def run(cluster, queries):
+    executed = cluster.run_workload(queries)
+    return executed, workload_summary(executed)
+
+
+# ------------------------------------------------------------ guard rails
+
+def test_reuse_off_is_default_and_counts_nothing():
+    catalog, data = handcrafted_dataset()
+    cluster = make_cluster(catalog, data, reuse="off")
+    assert cluster.coordinator.reuse == "off"
+    default = RawArrayCluster(catalog, FileReader(catalog, data), N_NODES,
+                              10**7)
+    assert default.coordinator.reuse == "off"
+    queries = [SimilarityJoinQuery(Box((0, 0), (9, 9)), eps=1)] * 3
+    executed, summary = run(cluster, queries)
+    assert all(v == 0 for k, v in cluster.coordinator.stats.items())
+    assert summary["reuse_hits"] == 0
+    assert summary["reuse_bytes_served"] == 0
+
+
+def test_unknown_reuse_mode_rejected():
+    catalog, data = handcrafted_dataset()
+    with pytest.raises(ValueError, match="reuse"):
+        make_cluster(catalog, data, reuse="maybe")
+
+
+# -------------------------------------------- the handcrafted skip scenario
+
+def test_covered_query_skips_rescan_with_identical_answers():
+    """Q2 overlaps an uncached leaf's bounding box but every actually
+    queried cell lives in covering cached chunks: reuse-off rescans the
+    file, reuse-on serves the sub-region from cache."""
+    q1 = SimilarityJoinQuery(Box((0, 0), (9, 9)), eps=1)
+    q2 = SimilarityJoinQuery(Box((5, 5), (20, 20)), eps=1)
+    results = {}
+    for reuse in ("off", "on"):
+        catalog, data = handcrafted_dataset()
+        cluster = make_cluster(catalog, data, reuse=reuse)
+        executed, summary = run(cluster, [q1, q2])
+        results[reuse] = (executed, summary, dict(cluster.coordinator.stats))
+    ex_off, s_off, _ = results["off"]
+    ex_on, s_on, stats = results["on"]
+
+    # Identical answers...
+    matches_off = [e.matches for e in ex_off]
+    matches_on = [e.matches for e in ex_on]
+    assert matches_on == matches_off
+    assert matches_on[1] > 0            # Q2 actually joins dense cells
+    # ...with strictly fewer raw bytes scanned.
+    assert s_on["bytes_scanned"] < s_off["bytes_scanned"]
+
+    r2_off, r2_on = ex_off[1].report, ex_on[1].report
+    assert sum(r2_off.scan_bytes_by_node.values()) > 0   # off: rescan
+    assert sum(r2_on.scan_bytes_by_node.values()) == 0   # on: served
+    assert r2_on.reuse_scan_skips == 1
+    # Soundness of the skip: the scan-free admission touches only chunks
+    # served from resident coverage — every queried chunk is a reuse hit
+    # and every queried cell was shipped as a slice ("cached implies
+    # scanned" is never violated by a skip).
+    assert r2_on.reuse_hits == len(r2_on.queried_chunks)
+    cell_bytes = catalog.by_id(0).cell_bytes
+    assert r2_on.reuse_bytes_served == r2_on.queried_cells * cell_bytes
+    assert r2_on.reuse_hits > 0
+    assert r2_on.reuse_bytes_served > 0
+    assert r2_on.residual_bytes_scanned == 0
+    assert stats["reuse_scan_skips"] == 1
+    assert stats["reuse_hits"] > 0
+
+
+def test_repeated_query_serves_slices_from_cache():
+    """Same query twice: the second admission is served entirely from
+    covering cached chunks (box-level full coverage + slice hits)."""
+    catalog, data = handcrafted_dataset()
+    cluster = make_cluster(catalog, data, reuse="on")
+    q = SimilarityJoinQuery(Box((0, 0), (9, 9)), eps=1)
+    first = cluster.run_query(q)
+    second = cluster.run_query(q)
+    assert sum(first.report.scan_bytes_by_node.values()) > 0
+    assert sum(second.report.scan_bytes_by_node.values()) == 0
+    assert second.report.reuse_hits > 0
+    assert second.report.reuse_bytes_served > 0
+    assert second.report.reuse_fully_covered
+    assert second.matches == first.matches
+
+
+def test_sliced_shipping_charges_at_most_chunk_bytes():
+    """Shipped bytes for covered slices never exceed the resident chunks'
+    full size, and the sliced extent matches the queried cell count."""
+    catalog, data = handcrafted_dataset()
+    cluster = make_cluster(catalog, data, reuse="on")
+    q = SimilarityJoinQuery(Box((0, 0), (9, 9)), eps=1)
+    cluster.run_query(q)
+    report = cluster.run_query(q).report
+    full = sum(cm.nbytes for cm in report.queried_chunks)
+    assert 0 < report.reuse_bytes_served <= full
+    cell_bytes = catalog.by_id(0).cell_bytes
+    assert report.reuse_bytes_served == report.queried_cells * cell_bytes
+
+
+# ------------------------------------------------- workload-level savings
+
+def parity_dataset():
+    """The fixed-seed dataset of ``tests/test_policy_parity.py`` — an
+    overlapping workload with known-positive join matches."""
+    files = make_ptf_files(n_files=10, cells_per_file_mean=900, seed=21)
+    return build_catalog(files, tempfile.mkdtemp(prefix="ptf_"), "fits",
+                         n_nodes=N_NODES)
+
+
+def parity_workload(catalog, repeats=2):
+    from repro.core.workload import ptf1_workload
+    base = (ptf1_workload(catalog.domain, n_queries=4, eps=300, seed=7)
+            + ptf2_workload(catalog.domain, n_queries=4, eps=300))
+    return base * repeats
+
+
+@pytest.mark.parametrize("policy", ["cost", "chunk_lru"])
+def test_overlapping_workload_scans_strictly_fewer_bytes(policy):
+    """On the repeated PTF overlapping workload the reuse path returns the
+    same match counts as reuse-off while scanning strictly fewer bytes."""
+    catalog, data = parity_dataset()
+    queries = parity_workload(catalog)
+    out = {}
+    for reuse in ("off", "on"):
+        cluster = make_cluster(catalog, data, reuse=reuse, policy=policy,
+                               budget=6_000, min_cells=64)
+        executed, summary = run(cluster, queries)
+        out[reuse] = ([e.matches for e in executed], summary)
+    matches_off, s_off = out["off"]
+    matches_on, s_on = out["on"]
+    assert matches_on == matches_off
+    assert sum(m for m in matches_on if m) > 0
+    assert s_on["bytes_scanned"] < s_off["bytes_scanned"]
+    assert s_on["reuse_hits"] > 0
+    assert s_on["reuse_bytes_served"] > 0
+    assert s_on["residual_bytes_scanned"] == s_on["bytes_scanned"]
+
+
+def test_file_granularity_slices_resident_units():
+    """file_lru under reuse: resident whole-file units are sliced to the
+    query extent, cutting shipped bytes while answers stay identical."""
+    catalog, data = parity_dataset()
+    total = sum(f.n_cells * f.cell_bytes for f in catalog.files)
+    queries = parity_workload(catalog, repeats=1)
+    out = {}
+    for reuse in ("off", "on"):
+        cluster = make_cluster(catalog, data, reuse=reuse, policy="file_lru",
+                               budget=4 * total)   # everything stays resident
+        executed, summary = run(cluster, queries)
+        net = sum(sum(e.report.join_plan.bytes_in.values())
+                  for e in executed if e.report.join_plan)
+        out[reuse] = ([e.matches for e in executed], summary, net)
+    matches_off, _, net_off = out["off"]
+    matches_on, s_on, net_on = out["on"]
+    assert matches_on == matches_off
+    assert s_on["reuse_hits"] > 0
+    assert s_on["reuse_bytes_served"] > 0
+    assert net_on <= net_off
+    # Scan bytes are untouched at file granularity (no finer extents).
+    assert s_on["bytes_scanned"] == out["off"][1]["bytes_scanned"]

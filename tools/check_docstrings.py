@@ -1,0 +1,90 @@
+#!/usr/bin/env python
+"""Docstring-coverage gate (an ``interrogate`` equivalent on the stdlib).
+
+Counts docstrings on modules, public classes, and public
+functions/methods (names not starting with ``_``) across a directory
+tree, reports per-file coverage, and exits non-zero when aggregate
+coverage falls below ``--fail-under``. Used by CI and by
+``tests/test_doc_coverage.py`` to keep ``src/repro/core`` documented:
+
+    python tools/check_docstrings.py src/repro/core --fail-under 90
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import os
+import sys
+from typing import Iterator, List, Tuple
+
+
+def _iter_nodes(tree: ast.Module) -> Iterator[Tuple[str, ast.AST]]:
+    """Yield (qualified name, node) for the module and every public
+    class/function defined at module or class level. Nested (closure)
+    functions are implementation detail and are not counted."""
+    yield "<module>", tree
+
+    def walk(body, prefix):
+        for node in body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                if node.name.startswith("_"):
+                    continue
+                name = f"{prefix}{node.name}"
+                yield name, node
+                if isinstance(node, ast.ClassDef):
+                    yield from walk(node.body, f"{name}.")
+
+    yield from walk(tree.body, "")
+
+
+def file_report(path: str) -> Tuple[int, int, List[str]]:
+    """(documented, total, missing-names) for one source file."""
+    with open(path, "r", encoding="utf-8") as fh:
+        tree = ast.parse(fh.read(), filename=path)
+    documented, total, missing = 0, 0, []
+    for name, node in _iter_nodes(tree):
+        total += 1
+        if ast.get_docstring(node):
+            documented += 1
+        else:
+            missing.append(name)
+    return documented, total, missing
+
+
+def main(argv=None) -> int:
+    """CLI entry point; returns the process exit code."""
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="+",
+                    help="files or directories to scan for .py sources")
+    ap.add_argument("--fail-under", type=float, default=90.0,
+                    help="minimum aggregate coverage percentage")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="only print the summary line")
+    args = ap.parse_args(argv)
+
+    sources: List[str] = []
+    for p in args.paths:
+        if os.path.isfile(p):
+            sources.append(p)
+        else:
+            for root, _, names in os.walk(p):
+                sources.extend(os.path.join(root, n) for n in sorted(names)
+                               if n.endswith(".py"))
+    documented = total = 0
+    for src in sorted(sources):
+        d, t, missing = file_report(src)
+        documented += d
+        total += t
+        if not args.quiet and missing:
+            for name in missing:
+                print(f"MISSING {src}: {name}")
+    pct = 100.0 * documented / total if total else 100.0
+    status = "PASSED" if pct >= args.fail_under else "FAILED"
+    print(f"doc coverage: {documented}/{total} = {pct:.1f}% "
+          f"(required {args.fail_under:.1f}%) {status}")
+    return 0 if pct >= args.fail_under else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
