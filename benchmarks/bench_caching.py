@@ -5,13 +5,17 @@ CLI knobs (the perf-trajectory harness):
 
     python -m benchmarks.bench_caching --policy cost,chunk_lru \
         --batch-size 4 --reuse on --out BENCH_caching.json
+    python -m benchmarks.bench_caching --sweep --out BENCH_caching.json
 
 ``--policy`` selects any registered policy combos (default: the paper's
-three), ``--batch-size`` routes admission through the coordinator's
-batched planning path, ``--reuse on`` enables the semantic cache-reuse
-rewrite, and ``--out`` writes a JSON summary — including the resolved
-policy spec and the reuse stats of every run — so successive PRs can
-diff the trajectory.
+three), ``--sweep`` replaces the policy list with the FULL valid
+(granularity x eviction x placement) cross product from the registries
+and records the per-workload winner under the JSON's ``sweep`` key,
+``--batch-size`` routes admission through the coordinator's batched
+planning path, ``--reuse on`` enables the semantic cache-reuse rewrite,
+and ``--out`` writes a JSON summary — including the resolved policy
+spec and the reuse stats of every run — so successive PRs can diff the
+trajectory.
 """
 from __future__ import annotations
 
@@ -33,6 +37,59 @@ BUDGET_FRACTIONS = (0.05, 0.10, 0.20)
 # Join radii matched to the synthetic data's cell spacing so cross-chunk
 # pairs exist (the paper joins arcsecond-scale matches on dense real data).
 PTF_EPS, GEO_EPS = 300, 500
+
+
+def sweep_policy_names() -> Sequence[str]:
+    """The full valid (granularity x eviction x placement) cross product,
+    as registered combo names. Triples already registered keep their
+    canonical name (``cost``, ``chunk_lru``, ...); the rest are
+    registered on the fly as ``{granularity}_{eviction}_{placement}``."""
+    from repro.core.policies import (EVICTION_REGISTRY, GRANULARITIES,
+                                     PLACEMENT_REGISTRY, POLICY_REGISTRY,
+                                     PolicySpec, register_policy)
+    names = []
+    for gran in GRANULARITIES:
+        for ev in EVICTION_REGISTRY:
+            for pl in PLACEMENT_REGISTRY:
+                spec = PolicySpec(f"{gran}_{ev}_{pl}", gran, ev, pl)
+                try:
+                    spec.validate()
+                except ValueError:
+                    continue            # e.g. file granularity needs an
+                    # online-capable eviction policy
+                existing = next(
+                    (s.name for s in POLICY_REGISTRY.values()
+                     if (s.granularity, s.eviction, s.placement)
+                     == (gran, ev, pl)), None)
+                names.append(existing or register_policy(spec).name)
+    return tuple(names)
+
+
+def sweep_winners(results: Dict) -> Dict:
+    """Per-workload winners over a sweep: the combo minimizing total
+    modeled time summed across budget fractions, plus the per-budget
+    winner (ties break lexicographically for determinism)."""
+    totals: Dict[str, Dict[str, float]] = {}
+    by_budget: Dict[str, Dict[str, Dict[str, float]]] = {}
+    specs: Dict[str, Dict] = {}
+    for (wl, frac, policy), payload in sorted(results.items()):
+        t = payload["summary"]["total_time_s"]
+        totals.setdefault(wl, {})
+        totals[wl][policy] = totals[wl].get(policy, 0.0) + t
+        by_budget.setdefault(wl, {}).setdefault(str(frac), {})[policy] = t
+        specs[policy] = payload["policy_spec"]
+    out: Dict = {}
+    for wl in sorted(totals):
+        best = min(sorted(totals[wl]), key=lambda p: totals[wl][p])
+        out[wl] = {
+            "policy": best,
+            "policy_spec": specs[best],
+            "total_time_s": totals[wl][best],
+            "by_budget": {
+                frac: min(sorted(t), key=lambda p: t[p])
+                for frac, t in sorted(by_budget[wl].items())},
+        }
+    return out
 
 
 def _workloads():
@@ -95,13 +152,17 @@ def run(print_rows: bool = True, policies: Sequence[str] = POLICIES,
 
 def to_json_summary(results: Dict, policies: Sequence[str],
                     batch_size: Optional[int],
-                    reuse: str = "off") -> Dict:
+                    reuse: str = "off", sweep: bool = False) -> Dict:
     """Serialize run() results: per (workload, policy, budget fraction)
     the modeled times, scan volume, the resolved policy spec, and the
     semantic-reuse counters of that run (the ``reuse`` knob is recorded
-    once, at the top level)."""
+    once, at the top level). With ``sweep=True`` the per-workload winning
+    combos are recorded under the ``sweep`` key."""
     out: Dict = {"benchmark": "bench_caching", "policies": list(policies),
                  "batch_size": batch_size, "reuse": reuse, "workloads": {}}
+    if sweep:
+        out["sweep"] = {"policies": list(policies),
+                        "winners": sweep_winners(results)}
     for (wl, frac, policy), payload in results.items():
         wl_entry = out["workloads"].setdefault(wl, {})
         pol_entry = wl_entry.setdefault(policy, {})
@@ -121,6 +182,10 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     ap.add_argument("--policy", default=",".join(POLICIES),
                     help="comma-separated registered policy combos "
                          "(e.g. cost,chunk_lru,chunk_lfu)")
+    ap.add_argument("--sweep", action="store_true",
+                    help="run the full valid (granularity x eviction x "
+                         "placement) registry cross product and record "
+                         "per-workload winners (overrides --policy)")
     ap.add_argument("--batch-size", type=int, default=None,
                     help="admit queries through process_batch in groups "
                          "of N (default: per-query admission)")
@@ -133,15 +198,19 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     ap.add_argument("--out", default="BENCH_caching.json",
                     help="JSON summary path ('' disables)")
     args = ap.parse_args(argv)
-    policies = tuple(p for p in args.policy.split(",") if p)
+    policies = (sweep_policy_names() if args.sweep
+                else tuple(p for p in args.policy.split(",") if p))
     fracs = (tuple(float(f) for f in args.budget_frac.split(","))
              if args.budget_frac else BUDGET_FRACTIONS)
     results = run(policies=policies, budget_fractions=fracs,
                   batch_size=args.batch_size, reuse=args.reuse)
+    if args.sweep:
+        for wl, win in sweep_winners(results).items():
+            print(f"sweep/{wl}/winner,0,{win['policy']}")
     if args.out:
         with open(args.out, "w") as fh:
             json.dump(to_json_summary(results, policies, args.batch_size,
-                                      args.reuse),
+                                      args.reuse, sweep=args.sweep),
                       fh, indent=2, sort_keys=True)
         print(f"wrote {args.out}")
 

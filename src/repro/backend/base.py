@@ -1,0 +1,132 @@
+"""Backend protocol and shared execution dataclasses.
+
+An :class:`ExecutionBackend` turns a query's planning report (produced
+by :class:`repro.core.coordinator.CacheCoordinator`) into an
+:class:`ExecutedQuery`. The planning layers never see the backend — the
+same plans flow into either implementation, which is what makes the
+byte-parity guarantees of ``tests/test_backend_parity.py`` hold by
+construction.
+
+:class:`DeviceBindingListener` is the hook surface a backend registers
+on :class:`repro.core.cache_state.CacheState` so committed device
+buffers move or free in lockstep with cache residency (the same
+life-cycle events the CoverageIndex syncs on: point-wise drop and
+split-remap, plus a post-round reconcile after eviction/placement
+reassign the resident set wholesale).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import (TYPE_CHECKING, Dict, List, Optional, Protocol, Sequence,
+                    runtime_checkable)
+
+if TYPE_CHECKING:  # planning types only; no runtime import cycle
+    from repro.core.cache_state import CacheState
+    from repro.core.chunk import ChunkMeta
+    from repro.core.coordinator import (CacheCoordinator, QueryReport,
+                                        SimilarityJoinQuery)
+
+BACKENDS = ("simulated", "jax_mesh")
+
+
+@dataclasses.dataclass
+class ExecutedQuery:
+    """A query's planning report plus its modeled phase times, the
+    (really computed) join match count, and — when the backend performs
+    real work — measured wall-clock/byte counters.
+
+    The ``time_*_s`` fields are always the §4.1 *modeled* phase times so
+    cross-backend comparisons stay apples-to-apples; ``measured_*``
+    fields are ``None`` under the simulated backend and real measured
+    quantities under the mesh backend.
+    """
+
+    report: "QueryReport"
+    time_scan_s: float
+    time_net_s: float
+    time_compute_s: float
+    time_opt_s: float
+    matches: Optional[int]
+    backend: str = "simulated"
+    measured_net_s: Optional[float] = None      # wall-clock of transfers
+    measured_compute_s: Optional[float] = None  # wall-clock of join kernels
+    measured_ship_bytes: Optional[int] = None   # device bytes moved
+
+    @property
+    def time_total_s(self) -> float:
+        """Modeled end-to-end latency: scan + net + compute + opt (§4.1)."""
+        return (self.time_scan_s + self.time_net_s + self.time_compute_s
+                + self.time_opt_s)
+
+
+@runtime_checkable
+class ExecutionBackend(Protocol):
+    """How a planned query is carried out (simulated or for real)."""
+
+    name: str
+
+    def bind(self, coordinator: "CacheCoordinator") -> None:
+        """Attach to a coordinator: the backend reads chunk coordinates
+        and cache state through it (and, for device backends, registers
+        its binding listener on ``coordinator.cache``)."""
+        ...
+
+    def execute(self, query: "SimilarityJoinQuery",
+                report: "QueryReport") -> ExecutedQuery:
+        """Execute one planned query; returns its ExecutedQuery."""
+        ...
+
+
+class DeviceBindingListener(Protocol):
+    """Cache life-cycle hooks a device-backed backend registers on
+    ``CacheState.listeners`` — buffer management in lockstep with
+    residency (mirror of the CoverageIndex sync points)."""
+
+    def on_drop(self, chunk_id: int) -> None:
+        """A chunk left the cache: free its committed buffer."""
+        ...
+
+    def on_split(self, parent_id: int, leaves: List["ChunkMeta"]) -> None:
+        """A cached chunk split: retire the parent's buffer (children
+        materialize at the next reconcile, at their inherited node)."""
+        ...
+
+    def reconcile(self, state: "CacheState") -> None:
+        """Post-round sync: after eviction/placement reassign residency
+        and locations wholesale, (re)materialize, move, or free buffers
+        so every cached chunk's committed buffer matches
+        ``state.locations``."""
+        ...
+
+
+def workload_summary(executed: Sequence[ExecutedQuery]) -> Dict[str, float]:
+    """Aggregate modeled times, scan volume, semantic-reuse counters, and
+    (when present) measured backend quantities over an executed workload
+    (the quantities the benchmarks report)."""
+    out = {
+        "total_time_s": sum(e.time_total_s for e in executed),
+        "scan_time_s": sum(e.time_scan_s for e in executed),
+        "net_time_s": sum(e.time_net_s for e in executed),
+        "compute_time_s": sum(e.time_compute_s for e in executed),
+        "opt_time_s": sum(e.time_opt_s for e in executed),
+        "bytes_scanned": float(sum(sum(e.report.scan_bytes_by_node.values())
+                                   for e in executed)),
+        "files_scanned": float(sum(len(e.report.files_scanned)
+                                   for e in executed)),
+        "queries": float(len(executed)),
+        "reuse_hits": float(sum(e.report.reuse_hits for e in executed)),
+        "reuse_bytes_served": float(sum(e.report.reuse_bytes_served
+                                        for e in executed)),
+        "residual_bytes_scanned": float(sum(e.report.residual_bytes_scanned
+                                            for e in executed)),
+        "reuse_scan_skips": float(sum(e.report.reuse_scan_skips
+                                      for e in executed)),
+    }
+    if any(e.measured_net_s is not None for e in executed):
+        out["measured_net_s"] = sum(e.measured_net_s or 0.0
+                                    for e in executed)
+        out["measured_compute_s"] = sum(e.measured_compute_s or 0.0
+                                        for e in executed)
+        out["measured_ship_bytes"] = float(sum(e.measured_ship_bytes or 0
+                                               for e in executed))
+    return out

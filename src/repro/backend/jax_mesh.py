@@ -1,0 +1,357 @@
+"""Device-mesh backend: real jax transfers and compiled Pallas joins.
+
+Maps the paper's *nodes* onto jax devices over a one-axis
+``jax.sharding.Mesh`` (axis name ``"node"``). Three things become real
+that the simulated backend only models:
+
+  * **Committed cache buffers** — every chunk in ``CacheState.cached``
+    is materialized as a device-resident jax array pinned (via
+    ``jax.device_put``) to the device of its ``CacheState.locations``
+    node. Buffers move/free in lockstep with admit, evict, and
+    split-remap through the :class:`~repro.backend.base.
+    DeviceBindingListener` hooks (the same life-cycle points the
+    CoverageIndex syncs on).
+  * **Ship decisions** — each ``plan_join`` transfer route (chunk, src,
+    dest) is replayed as an actual cross-device ``jax.device_put`` with
+    measured bytes and wall-clock (``measured_net_s`` /
+    ``measured_ship_bytes``).
+  * **Join compute** — each node's chunk-pair batch is shape-bucketed
+    and dispatched to the ``kernels/simjoin`` Pallas kernel on that
+    node's device, compiled (``interpret=False``) when the platform
+    supports it (TPU/GPU; auto-detected, overridable), interpret-mode
+    on CPU. Per-node kernel wall-clock is measured and combined with
+    the §4.1 ``max_n`` convention into ``measured_compute_s``.
+
+On CPU-only hosts, run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` so jax exposes N
+virtual CPU devices and CI exercises real cross-device placement; with
+fewer devices than nodes the node axis wraps (node ``k`` lives on device
+``k % n_devices``).
+
+Modeled ``time_*_s`` fields are still reported (computed from the same
+plans) so the two backends remain directly comparable; the measured
+fields are additive, never substitutes.
+"""
+from __future__ import annotations
+
+import time
+import warnings
+from typing import (TYPE_CHECKING, Any, Callable, Dict, List, Optional,
+                    Sequence, Tuple)
+
+import numpy as np
+
+if TYPE_CHECKING:
+    from repro.core.cache_state import CacheState
+    from repro.core.chunk import ChunkMeta
+    from repro.core.coordinator import (CacheCoordinator, QueryReport,
+                                        SimilarityJoinQuery)
+from repro.backend.base import BACKENDS, ExecutedQuery
+from repro.backend.cost_model import CostModel
+from repro.backend.simulated import SimulatedBackend
+
+
+def compiled_mode_supported() -> bool:
+    """Whether the default jax platform compiles Pallas kernels
+    (TPU via Mosaic, GPU via Triton); CPU runs interpret-mode only."""
+    import jax
+    return jax.default_backend() in ("tpu", "gpu")
+
+
+class JaxMeshBackend(SimulatedBackend):
+    """Execution over a one-axis device mesh: nodes -> jax devices."""
+
+    name = "jax_mesh"
+
+    def __init__(self, n_nodes: int, cost_model: Optional[CostModel] = None,
+                 devices: Optional[Sequence[Any]] = None,
+                 compiled: Optional[bool] = None,
+                 execute_joins: bool = True):
+        import jax
+        from jax.sharding import Mesh
+        # The mesh backend always joins through the Pallas kernel; the
+        # simulated parent's executor field is unused but kept coherent.
+        interpret = not (compiled_mode_supported() if compiled is None
+                         else compiled)
+        super().__init__(n_nodes, cost_model=cost_model,
+                         join_backend="pallas", execute_joins=execute_joins,
+                         interpret=interpret)
+        self.interpret = interpret
+        self.devices = tuple(devices if devices is not None
+                             else jax.devices())
+        if not self.devices:
+            raise ValueError("jax reports no devices")
+        if len(self.devices) < n_nodes:
+            warnings.warn(
+                f"jax_mesh: {n_nodes} nodes over {len(self.devices)} "
+                f"devices — the node axis wraps (node k -> device "
+                f"k % {len(self.devices)}). Set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={n_nodes} for "
+                f"one CPU device per node.", RuntimeWarning, stacklevel=2)
+        self.mesh = Mesh(np.array(self.devices), ("node",))
+        # The parent already built a PallasJoinExecutor; share its kernel
+        # handles rather than re-importing them.
+        from repro.backend.executors import PallasJoinExecutor
+        if not isinstance(self.executor, PallasJoinExecutor):
+            raise ImportError(
+                "jax_mesh backend requires the Pallas simjoin kernel")
+        self._ops = self.executor._ops
+        self._block = self.executor._block
+        self._sentinel = self.executor._sentinel
+        # Committed cache buffers: chunk id -> device array, and the node
+        # whose device currently holds it (the CacheState.locations view).
+        self._buffers: Dict[int, Any] = {}
+        self._buffer_node: Dict[int, int] = {}
+        # Cumulative device-side counters (bench_scalability surfaces them).
+        self.device_stats: Dict[str, float] = {
+            "committed_bytes_materialized": 0.0,
+            "committed_bytes_moved": 0.0,
+            "committed_buffers_freed": 0.0,
+            "ship_bytes_measured": 0.0,
+            "ship_transfers": 0.0,
+        }
+
+    # --------------------------------------------------------- device math
+
+    def device_for_node(self, node: int) -> Any:
+        """The mesh device hosting a paper node (wraps when the mesh is
+        smaller than the node count). The mesh's device array is the
+        single source of truth for the node -> device map."""
+        devs = self.mesh.devices
+        return devs[node % devs.size]
+
+    def buffer_device(self, chunk_id: int) -> Optional[Any]:
+        """The device holding a chunk's committed buffer, or ``None``."""
+        buf = self._buffers.get(chunk_id)
+        if buf is None:
+            return None
+        (dev,) = buf.devices()
+        return dev
+
+    def committed_chunks(self) -> Dict[int, int]:
+        """Snapshot of committed buffers: chunk id -> node."""
+        return dict(self._buffer_node)
+
+    # ------------------------------------------------------------- binding
+
+    def bind(self, coordinator: "CacheCoordinator") -> None:
+        """Attach to the coordinator and register the device-binding
+        hooks on its ``CacheState`` so buffers track residency."""
+        super().bind(coordinator)
+        coordinator.cache.add_listener(self)
+
+    # ------------------------- DeviceBindingListener (cache life-cycle) --
+
+    def on_drop(self, chunk_id: int) -> None:
+        """Eviction/placement dropped a chunk: free its device buffer."""
+        if self._buffers.pop(chunk_id, None) is not None:
+            self.device_stats["committed_buffers_freed"] += 1
+        self._buffer_node.pop(chunk_id, None)
+
+    def on_split(self, parent_id: int, leaves: List["ChunkMeta"]) -> None:
+        """A cached chunk split: retire the parent's buffer. The children
+        inherit its residency/location in ``CacheState`` and materialize
+        on the inherited node's device at the next reconcile."""
+        if self._buffers.pop(parent_id, None) is not None:
+            self.device_stats["committed_buffers_freed"] += 1
+        self._buffer_node.pop(parent_id, None)
+
+    def reconcile(self, state: "CacheState") -> None:
+        """Post-round sync (the device twin of ``sync_coverage``): free
+        buffers of chunks no longer resident, materialize buffers for
+        newly resident chunks, and move buffers whose location changed —
+        so every committed buffer lives on the device matching
+        ``CacheState.locations``."""
+        import jax
+        import jax.numpy as jnp
+        assert self.coordinator is not None, "backend not bound"
+        chunks = self.coordinator.chunks
+        for cid in list(self._buffers):
+            if cid not in state.cached:
+                self.on_drop(cid)
+        for cid in state.cached:
+            node = state.locations.get(cid)
+            if node is None:
+                # Not yet located (e.g. origin placement before first
+                # touch): the chunk lives at its home node.
+                if cid not in chunks.chunk_file:
+                    continue
+                node = chunks.home_node(cid)
+            buf = self._buffers.get(cid)
+            if buf is None:
+                meta = chunks.meta_of(cid)
+                if meta is None:       # retired id; re-enters next round
+                    continue
+                coords = chunks.chunk_coords(cid, meta.file_id)
+                buf = jax.device_put(jnp.asarray(coords, jnp.int32),
+                                     self.device_for_node(node))
+                buf.block_until_ready()
+                self._buffers[cid] = buf
+                self._buffer_node[cid] = node
+                self.device_stats["committed_bytes_materialized"] += \
+                    buf.nbytes
+            elif self._buffer_node.get(cid) != node:
+                old_node = self._buffer_node.get(cid)
+                moved = jax.device_put(buf, self.device_for_node(node))
+                moved.block_until_ready()
+                self._buffers[cid] = moved
+                self._buffer_node[cid] = node
+                # Count only relocations that cross physical devices: a
+                # node change that wraps onto the same device (mesh
+                # smaller than the node count) moves no bytes — the same
+                # exclusion _ship applies to transfer routes.
+                if (old_node is None or self.device_for_node(old_node)
+                        != self.device_for_node(node)):
+                    self.device_stats["committed_bytes_moved"] += buf.nbytes
+
+    # ----------------------------------------------------------- execution
+
+    def _ship(self, report: "QueryReport",
+              coords_of: Callable[[int], np.ndarray]
+              ) -> Tuple[float, int]:
+        """Replay the join plan's ship decisions as real cross-device
+        transfers; returns (measured seconds, measured bytes). Routes
+        whose src and dest land on the same physical device (mesh wrap)
+        move no bytes and are excluded from the byte count."""
+        import jax
+        import jax.numpy as jnp
+        if report.join_plan is None:
+            return 0.0, 0
+        total_s, total_b = 0.0, 0
+        n_transfers = 0
+        staged: Dict[int, Any] = {}
+        reuse_on = self.coordinator.reuse == "on"
+        for cid, src, dst in report.join_plan.transfer_routes:
+            src_dev = self.device_for_node(src)
+            dst_dev = self.device_for_node(dst)
+            if src_dev == dst_dev:
+                continue
+            payload = staged.get(cid)
+            if payload is None:
+                # Without reuse slicing the shipped payload is the whole
+                # chunk — exactly the committed buffer when it is already
+                # pinned at the source node; stage a fresh copy only when
+                # no such buffer exists (just-scanned chunk) or the plan
+                # ships a sliced extent.
+                if not reuse_on and self._buffer_node.get(cid) == src:
+                    payload = self._buffers[cid]
+                else:
+                    payload = jax.device_put(
+                        jnp.asarray(coords_of(cid), jnp.int32), src_dev)
+                    payload.block_until_ready()
+                staged[cid] = payload
+            t0 = time.perf_counter()
+            shipped = jax.device_put(payload, dst_dev)
+            shipped.block_until_ready()
+            total_s += time.perf_counter() - t0
+            total_b += int(payload.nbytes)
+            n_transfers += 1
+        self.device_stats["ship_bytes_measured"] += total_b
+        self.device_stats["ship_transfers"] += n_transfers
+        return total_s, total_b
+
+    def _dispatch_joins(self, tasks, eps: int
+                        ) -> Tuple[Optional[int], float]:
+        """Shape-bucketed per-node Pallas dispatch: every bucket's stacked
+        batch is placed on its node's device before the kernel call, so
+        compilation and execution happen per device. Returns (total match
+        count, measured compute seconds = max over nodes, the §4.1
+        ``max_n`` convention applied to measured per-node wall-clock)."""
+        import jax
+        import jax.numpy as jnp
+        from repro.backend.executors import bucket_by_shape, stack_bucket
+        node_time: Dict[int, float] = {}
+        total = 0
+        buckets = bucket_by_shape(tasks, self._block, by_node=True)
+        for (node, same, _, _), idxs in buckets.items():
+            a_stack, b_stack = stack_bucket(tasks, idxs, self._ops,
+                                            self._sentinel)
+            dev = self.device_for_node(node)
+            a_dev = jax.device_put(jnp.asarray(a_stack), dev)
+            b_dev = jax.device_put(jnp.asarray(b_stack), dev)
+            a_dev.block_until_ready()
+            b_dev.block_until_ready()
+            t0 = time.perf_counter()
+            got = self._ops.count_similar_pairs_batch(
+                a_dev, b_dev, int(eps), bool(same),
+                interpret=self.interpret)
+            got.block_until_ready()
+            node_time[node] = (node_time.get(node, 0.0)
+                               + time.perf_counter() - t0)
+            total += int(np.asarray(got).sum())
+        return total, max(node_time.values(), default=0.0)
+
+    def execute(self, query: "SimilarityJoinQuery",
+                report: "QueryReport") -> ExecutedQuery:
+        """Execute one planned query on the mesh: modeled phase times
+        from the shared cost model, plus measured transfer and join
+        wall-clock/bytes from the real device work."""
+        assert self.coordinator is not None, "backend not bound"
+        time_scan = self.modeled_scan_time(report)
+        time_net = self.modeled_net_time(report)
+        tasks, work_by_node, coords_cache = self.gather_join_tasks(
+            query, report)
+        cm = {c.chunk_id: c for c in report.queried_chunks}
+
+        def coords_of(cid: int) -> np.ndarray:
+            # Ship what the plan ships: the sliced extent under semantic
+            # reuse, the whole chunk otherwise (a shipped chunk becomes a
+            # full replica the placement round may keep).
+            if self.coordinator.reuse == "on":
+                if cid not in coords_cache:
+                    coords_cache[cid] = self._queried_coords(
+                        cid, cm[cid].file_id, query.box)
+                return coords_cache[cid]
+            return self.coordinator.chunks.chunk_coords(
+                cid, cm[cid].file_id)
+
+        measured_net, measured_bytes = self._ship(report, coords_of)
+        matches: Optional[int] = None
+        measured_compute = 0.0
+        if report.join_plan is not None and self.execute_joins:
+            matches, measured_compute = self._dispatch_joins(
+                tasks, query.eps)
+        time_compute = (max(work_by_node.values(), default=0)
+                        / self.cost.cell_pairs_per_sec)
+        t_opt = report.opt_time_chunking_s + report.opt_time_evict_place_s
+        return ExecutedQuery(report=report, time_scan_s=time_scan,
+                             time_net_s=time_net,
+                             time_compute_s=time_compute,
+                             time_opt_s=t_opt, matches=matches,
+                             backend=self.name,
+                             measured_net_s=measured_net,
+                             measured_compute_s=measured_compute,
+                             measured_ship_bytes=measured_bytes)
+
+
+def make_backend(backend: str, n_nodes: int,
+                 cost_model: Optional[CostModel] = None,
+                 join_fn: Optional[Callable[..., int]] = None,
+                 join_backend: str = "numpy", execute_joins: bool = True,
+                 devices: Optional[Sequence[Any]] = None,
+                 compiled: Optional[bool] = None) -> SimulatedBackend:
+    """Build an execution backend by name, degrading ``jax_mesh`` ->
+    ``simulated`` with a warning when jax is unavailable."""
+    if backend == "simulated":
+        return SimulatedBackend(n_nodes, cost_model=cost_model,
+                                join_fn=join_fn, join_backend=join_backend,
+                                execute_joins=execute_joins)
+    if backend == "jax_mesh":
+        if join_fn is not None:
+            raise ValueError(
+                "join_fn overrides the numpy executor's predicate; the "
+                "jax_mesh backend always runs the Pallas simjoin kernel "
+                "— pass one or the other")
+        try:
+            return JaxMeshBackend(n_nodes, cost_model=cost_model,
+                                  devices=devices, compiled=compiled,
+                                  execute_joins=execute_joins)
+        except ImportError as e:
+            warnings.warn(f"backend='jax_mesh' unavailable ({e}); "
+                          f"falling back to the simulated backend",
+                          RuntimeWarning, stacklevel=2)
+            return SimulatedBackend(n_nodes, cost_model=cost_model,
+                                    join_fn=join_fn,
+                                    join_backend=join_backend,
+                                    execute_joins=execute_joins)
+    raise ValueError(f"unknown backend {backend!r}; known: {BACKENDS}")

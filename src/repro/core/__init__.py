@@ -12,8 +12,9 @@ Public API by layer:
   * placement.cost_based_placement — Alg. 3 (+ static baseline)
   * policies — EvictionPolicy/PlacementPolicy protocols + combo registry
   * coordinator.CacheCoordinator — the Figure-2 pipeline; batched admission
-  * cluster.RawArrayCluster — simulated shared-nothing execution + cost
-    model + numpy/Pallas join executors
+  * cluster.RawArrayCluster — shared-nothing execution façade over the
+    pluggable backends in ``repro.backend`` (simulated §4.1 cost model,
+    or a real jax device mesh with measured transfers + Pallas joins)
   * workload — PTF-1 / PTF-2 / GEO query generators
 """
 from repro.core.geometry import (Box, bounding_box, box_subtract, expand,
@@ -32,9 +33,10 @@ from repro.core.policies import (POLICIES, POLICY_REGISTRY, PolicySpec,
 from repro.core.join_planner import JoinPlan, candidate_pairs, plan_join
 from repro.core.coordinator import (CacheCoordinator, QueryReport,
                                     SimilarityJoinQuery)
-from repro.core.cluster import (CostModel, ExecutedQuery, NumpyJoinExecutor,
-                                PallasJoinExecutor, RawArrayCluster,
-                                count_similar_pairs_np, workload_summary)
+from repro.core.cluster import (BACKENDS, CostModel, ExecutedQuery,
+                                NumpyJoinExecutor, PallasJoinExecutor,
+                                RawArrayCluster, count_similar_pairs_np,
+                                make_backend, workload_summary)
 
 __all__ = [
     "Box", "bounding_box", "box_subtract", "expand", "residual_boxes",
@@ -46,7 +48,8 @@ __all__ = [
     "cost_based_placement", "static_placement", "POLICIES",
     "POLICY_REGISTRY", "PolicySpec", "register_policy", "resolve_policy",
     "JoinPlan", "candidate_pairs", "plan_join", "CacheCoordinator",
-    "QueryReport", "SimilarityJoinQuery", "CostModel", "ExecutedQuery",
-    "NumpyJoinExecutor", "PallasJoinExecutor", "RawArrayCluster",
-    "count_similar_pairs_np", "workload_summary",
+    "QueryReport", "SimilarityJoinQuery", "BACKENDS", "CostModel",
+    "ExecutedQuery", "NumpyJoinExecutor", "PallasJoinExecutor",
+    "RawArrayCluster", "count_similar_pairs_np", "make_backend",
+    "workload_summary",
 ]

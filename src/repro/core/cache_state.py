@@ -46,6 +46,13 @@ class CacheState:
         self.cached: Set[int] = set()            # resident chunk ids
         self.locations: Dict[int, int] = {}      # cached chunk -> node
         self.coverage = CoverageIndex()          # boxes of resident chunks
+        # Device-binding listeners (repro.backend.base.
+        # DeviceBindingListener): execution backends that commit cached
+        # chunks as device buffers register here so buffers move/free in
+        # lockstep with residency. Point-wise events fire from ``drop``
+        # and ``remap_split``; ``sync_devices`` reconciles after policy
+        # rounds that reassign the resident set wholesale.
+        self.listeners: List = []
 
     # ------------------------------------------------------------- budgets
 
@@ -76,6 +83,21 @@ class CacheState:
                 out[node] = out.get(node, 0) + chunk_bytes.get(cid, 0)
         return out
 
+    # ----------------------------------------------------------- listeners
+
+    def add_listener(self, listener) -> None:
+        """Register a device-binding listener (idempotent)."""
+        if listener not in self.listeners:
+            self.listeners.append(listener)
+
+    def sync_devices(self) -> None:
+        """Ask every device-binding listener to reconcile its committed
+        buffers with the current ``cached``/``locations`` view — the
+        device twin of :meth:`sync_coverage`, run by the coordinator
+        after each eviction/placement round."""
+        for listener in self.listeners:
+            listener.reconcile(self)
+
     # ------------------------------------------------------------ mutation
 
     def location_of(self, chunk_id: int, default: Optional[int] = None
@@ -94,12 +116,16 @@ class CacheState:
             if loc is not None:
                 self.locations[cm.chunk_id] = loc
         self.coverage.remap_split(parent_id, leaves)
+        for listener in self.listeners:
+            listener.on_split(parent_id, leaves)
 
     def drop(self, chunk_id: int) -> None:
         """Remove a chunk from residency, location, and coverage index."""
         self.cached.discard(chunk_id)
         self.locations.pop(chunk_id, None)
         self.coverage.remove(chunk_id)
+        for listener in self.listeners:
+            listener.on_drop(chunk_id)
 
     def sync_coverage(self, meta_of: Callable[[int], Optional[ChunkMeta]]
                       ) -> None:

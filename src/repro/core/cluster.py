@@ -1,194 +1,59 @@
-"""Shared-nothing cluster simulator + cost model (§4.1 System).
+"""Shared-nothing cluster façade over the pluggable execution backends.
 
 The *algorithms* (chunking, planning, eviction, placement) and the *join
-compute* run for real; disk and network are replaced by a calibrated cost
-model (the container is one box, the paper's testbed was 8 workers + 1
-coordinator on HDD + GbE). Algorithmic quantities — bytes scanned, bytes
-shipped, cache contents, chunk counts, plan times — are exact; wall-clock is
-modeled as
+compute* always run for real; how disk, network, and device placement are
+carried out is the backend's job (``repro.backend``):
 
-    t(query) = max_n scan_n + max_n net_n + max_n compute_n + t_opt(measured)
+  * ``backend="simulated"`` — the §4.1 calibrated cost model (the seed
+    behavior, extracted into :class:`repro.backend.SimulatedBackend`):
+    the container is one box, wall-clock is modeled as
 
-with scan_n = scanned_bytes/disk_bw + decoded_cells/decode_rate(fmt),
-net_n = max(bytes_in, bytes_out)/net_bw (full-duplex switch), and
-compute_n = assigned cell-pair work / pair_rate. Defaults follow §4.1:
-125 MB/s disk and network. A TPU-pod profile (PCIe host link + ICI) is
-provided for the framework integration experiments.
+        t(query) = max_n scan_n + max_n net_n + max_n compute_n + t_opt
 
-Join execution backends (``join_backend``):
+    with scan_n = scanned_bytes/disk_bw + decoded_cells/decode_rate(fmt),
+    net_n = max(bytes_in, bytes_out)/net_bw (full-duplex switch), and
+    compute_n = assigned cell-pair work / pair_rate.
+  * ``backend="jax_mesh"`` — real execution over a jax device mesh
+    (:class:`repro.backend.JaxMeshBackend`): cached chunks become
+    device-resident buffers pinned to their ``CacheState.locations``
+    node, ship decisions become measured cross-device transfers, and
+    each node's simjoin batch dispatches to the Pallas kernel on that
+    node's device (compiled where the platform supports it).
+
+Join execution backends for the simulated path (``join_backend``):
 
   * ``"numpy"``  — the reference executor: one blocked numpy evaluation
     per chunk pair (``join_fn`` override preserved).
-  * ``"pallas"`` — the batched executor: each node's chunk-pair work is
-    grouped, coordinate sets are padded to the kernel's 128-wide BLOCK,
-    and shape-bucketed pair batches are dispatched to the
-    ``kernels/simjoin`` Pallas kernel (interpret-mode by default, so it
-    runs on CPU CI and compiles on TPU).
+  * ``"pallas"`` — the batched executor: BLOCK-padded, shape-bucketed
+    pair batches dispatched to the ``kernels/simjoin`` Pallas kernel
+    (interpret-mode by default, so it runs on CPU CI and compiles on
+    TPU).
+
+This module re-exports the cost model, executors, ``ExecutedQuery``, and
+``workload_summary`` from ``repro.backend`` so seed-era imports keep
+working.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import (TYPE_CHECKING, Callable, Dict, List, Optional, Sequence,
-                    Tuple)
-
-import numpy as np
+from typing import (TYPE_CHECKING, Any, Callable, List, Optional, Sequence)
 
 if TYPE_CHECKING:  # duck-typed at runtime to avoid a package cycle
     from repro.arrayio.catalog import Catalog, FileReader
-from repro.arrayio.formats import DECODE_CELLS_PER_SEC
-from repro.core.coordinator import (CacheCoordinator, QueryReport,
-                                    SimilarityJoinQuery)
-from repro.core.geometry import points_in_box
+from repro.backend import (BACKENDS, CostModel, ExecutedQuery, JOIN_BACKENDS,
+                           JoinTask, NumpyJoinExecutor, PallasJoinExecutor,
+                           count_similar_pairs_np, make_backend,
+                           make_join_executor, workload_summary)
+from repro.core.coordinator import CacheCoordinator, SimilarityJoinQuery
 
-JOIN_BACKENDS = ("numpy", "pallas")
-
-
-@dataclasses.dataclass(frozen=True)
-class CostModel:
-    """Calibrated per-node bandwidths/rates for the §4.1 time model."""
-
-    disk_bw: float = 125e6               # B/s  (§4.1: HDD ~ GbE)
-    net_bw: float = 125e6                # B/s per node link
-    cell_pairs_per_sec: float = 5e8      # join predicate throughput per node
-    decode_rates: Dict[str, float] = dataclasses.field(
-        default_factory=lambda: dict(DECODE_CELLS_PER_SEC))
-
-    @staticmethod
-    def tpu_pod_host() -> "CostModel":
-        """v5e-host profile: raw shards on host NVMe/DRAM, PCIe to device,
-        ICI between pods' hosts (DESIGN.md hardware-adaptation notes)."""
-        return CostModel(disk_bw=3.2e9, net_bw=50e9, cell_pairs_per_sec=2e11,
-                         decode_rates={k: v * 50 for k, v in
-                                       DECODE_CELLS_PER_SEC.items()})
-
-
-def count_similar_pairs_np(a: np.ndarray, b: np.ndarray, eps: int,
-                           same: bool, block: int = 4096) -> int:
-    """Unordered (x != y) L1-neighbor pairs between cell coordinate sets.
-    Blocked to bound memory; numpy reference executor."""
-    if a.shape[0] == 0 or b.shape[0] == 0:
-        return 0
-    total = 0
-    for i0 in range(0, a.shape[0], block):
-        ai = a[i0:i0 + block]
-        for j0 in range(0, b.shape[0], block):
-            bj = b[j0:j0 + block]
-            dist = np.abs(ai[:, None, :].astype(np.int64)
-                          - bj[None, :, :].astype(np.int64)).sum(axis=2)
-            hit = dist <= eps
-            if same:
-                # Count each unordered pair once; drop identical cells.
-                ii = i0 + np.arange(ai.shape[0])[:, None]
-                jj = j0 + np.arange(bj.shape[0])[None, :]
-                hit &= ii < jj
-            total += int(hit.sum())
-    return total
-
-
-# ---------------------------------------------------------------------------
-# Join executors: per-node grouped chunk-pair work -> match counts.
-# ---------------------------------------------------------------------------
-
-# One unit of join work: (node, a coords, b coords, self-join?).
-JoinTask = Tuple[int, np.ndarray, np.ndarray, bool]
-
-
-class NumpyJoinExecutor:
-    """Reference executor: evaluate each pair independently."""
-
-    def __init__(self, join_fn: Callable[..., int]):
-        self.join_fn = join_fn
-
-    def count_pairs(self, tasks: Sequence[JoinTask], eps: int) -> List[int]:
-        """Per-task match counts via the (overridable) numpy predicate."""
-        return [self.join_fn(a, b, eps, same) for _, a, b, same in tasks]
-
-
-class PallasJoinExecutor:
-    """Batched executor over the ``kernels/simjoin`` Pallas kernel.
-
-    Each node's chunk-pair tasks are padded to BLOCK and bucketed by
-    padded shape and self-join mode; each bucket is dispatched as ONE
-    stacked kernel call — turning a pair-at-a-time python loop into a
-    handful of jit'd launches per query. Buckets span nodes because the
-    simulator executes every node's work on this one device; a real
-    multi-host backend would key buckets by node as well."""
-
-    def __init__(self, interpret: bool = True):
-        # Imported lazily so the numpy backend never pulls in jax.
-        from repro.kernels.simjoin import ops, simjoin
-        self._ops = ops
-        self._block = simjoin.BLOCK
-        self._sentinel = simjoin.SENTINEL
-        self.interpret = interpret
-
-    def count_pairs(self, tasks: Sequence[JoinTask], eps: int) -> List[int]:
-        """Per-task match counts via bucketed batched kernel dispatch."""
-        import jax.numpy as jnp
-        counts = [0] * len(tasks)
-        buckets: Dict[Tuple[bool, int, int], List[int]] = {}
-        for i in range(len(tasks)):
-            _, a, b, same = tasks[i]
-            if a.shape[0] == 0 or b.shape[0] == 0:
-                continue
-            na = -(-a.shape[0] // self._block) * self._block
-            nb = -(-b.shape[0] // self._block) * self._block
-            buckets.setdefault((same, na, nb), []).append(i)
-        for (same, _, _), idxs in buckets.items():
-            a_stack = np.stack([self._ops.pad_cm_np(tasks[i][1],
-                                                    self._sentinel)
-                                for i in idxs])
-            b_stack = np.stack([self._ops.pad_cm_np(tasks[i][2],
-                                                    -self._sentinel)
-                                for i in idxs])
-            got = self._ops.count_similar_pairs_batch(
-                jnp.asarray(a_stack), jnp.asarray(b_stack), int(eps),
-                bool(same), interpret=self.interpret)
-            for i, c in zip(idxs, np.asarray(got)):
-                counts[i] = int(c)
-        return counts
-
-
-def make_join_executor(backend: str, join_fn: Callable[..., int],
-                       interpret: bool = True):
-    """Build a join executor for ``backend``, degrading pallas -> numpy
-    with a warning when jax is unavailable."""
-    if backend == "numpy":
-        return NumpyJoinExecutor(join_fn)
-    if backend == "pallas":
-        try:
-            return PallasJoinExecutor(interpret=interpret)
-        except ImportError as e:                 # jax not available: degrade
-            import warnings
-            warnings.warn(f"join_backend='pallas' unavailable ({e}); "
-                          f"falling back to the numpy executor",
-                          RuntimeWarning, stacklevel=3)
-            return NumpyJoinExecutor(join_fn)
-    raise ValueError(f"unknown join backend {backend!r}; "
-                     f"known: {JOIN_BACKENDS}")
-
-
-@dataclasses.dataclass
-class ExecutedQuery:
-    """A query's planning report plus its modeled phase times and the
-    (really computed) join match count."""
-
-    report: QueryReport
-    time_scan_s: float
-    time_net_s: float
-    time_compute_s: float
-    time_opt_s: float
-    matches: Optional[int]
-
-    @property
-    def time_total_s(self) -> float:
-        """Modeled end-to-end latency: scan + net + compute + opt (§4.1)."""
-        return (self.time_scan_s + self.time_net_s + self.time_compute_s
-                + self.time_opt_s)
+__all__ = ["BACKENDS", "CostModel", "ExecutedQuery", "JOIN_BACKENDS",
+           "JoinTask", "NumpyJoinExecutor", "PallasJoinExecutor",
+           "RawArrayCluster", "count_similar_pairs_np", "make_backend",
+           "make_join_executor", "workload_summary"]
 
 
 class RawArrayCluster:
-    """N simulated worker nodes + coordinator, wired to the caching stack."""
+    """N worker nodes + coordinator, wired to the caching stack and an
+    execution backend (simulated cost model or real jax device mesh)."""
 
     def __init__(self, catalog: "Catalog", reader: "FileReader", n_nodes: int,
                  node_budget_bytes: int, policy: str = "cost",
@@ -198,7 +63,10 @@ class RawArrayCluster:
                  execute_joins: bool = True,
                  join_backend: str = "numpy",
                  budget_scope: str = "global",
-                 reuse: str = "off"):
+                 reuse: str = "off",
+                 backend: str = "simulated",
+                 devices: Optional[Sequence[Any]] = None,
+                 compiled: Optional[bool] = None):
         if join_fn is not None and join_backend != "numpy":
             raise ValueError(
                 "join_fn overrides the join predicate of the numpy "
@@ -207,86 +75,44 @@ class RawArrayCluster:
         self.catalog = catalog
         self.reader = reader
         self.n_nodes = n_nodes
-        self.cost = cost_model or CostModel()
-        self.join_fn = join_fn or count_similar_pairs_np
-        self.execute_joins = execute_joins
-        self.executor = make_join_executor(join_backend, self.join_fn)
+        self.backend = make_backend(
+            backend, n_nodes, cost_model=cost_model, join_fn=join_fn,
+            join_backend=join_backend, execute_joins=execute_joins,
+            devices=devices, compiled=compiled)
         self.coordinator = CacheCoordinator(
             catalog, reader, n_nodes, node_budget_bytes, policy=policy,
             placement_mode=placement_mode, min_cells=min_cells,
             budget_scope=budget_scope, reuse=reuse)
+        self.backend.bind(self.coordinator)
+
+    # ------------------------------------------------ backend-state views
+
+    @property
+    def cost(self) -> CostModel:
+        """The backend's calibrated cost model (seed-API view)."""
+        return self.backend.cost
+
+    @property
+    def join_fn(self) -> Callable[..., int]:
+        """The numpy executor's join predicate (seed-API view)."""
+        return self.backend.join_fn
+
+    @property
+    def executor(self):
+        """The backend's join executor (seed-API view)."""
+        return self.backend.executor
+
+    @property
+    def execute_joins(self) -> bool:
+        """Whether join compute actually runs (seed-API view)."""
+        return self.backend.execute_joins
 
     # ----------------------------------------------------------- execution
-
-    def _queried_coords(self, chunk_id: int, file_id: int,
-                        box) -> np.ndarray:
-        coords = self.coordinator.chunks.chunk_coords(chunk_id, file_id)
-        return coords[points_in_box(coords, box)]
-
-    def _execute(self, query: SimilarityJoinQuery,
-                 report: QueryReport) -> ExecutedQuery:
-        """Apply the cost model and run the join plan's compute."""
-        cm = {c.chunk_id: c for c in report.queried_chunks}
-
-        # --- modeled scan phase
-        scan_n: Dict[int, float] = {}
-        for node, nbytes in report.scan_bytes_by_node.items():
-            scan_n[node] = nbytes / self.cost.disk_bw
-        for node, per_fmt in report.decode_cells_by_node.items():
-            for fmt, cells in per_fmt.items():
-                scan_n[node] = (scan_n.get(node, 0.0)
-                                + cells / self.cost.decode_rates[fmt])
-        time_scan = max(scan_n.values(), default=0.0)
-
-        # --- modeled network phase (join shipping + placement fallbacks)
-        time_net = 0.0
-        if report.join_plan is not None:
-            per_node = []
-            for n in range(self.n_nodes):
-                bi = report.join_plan.bytes_in.get(n, 0)
-                bo = report.join_plan.bytes_out.get(n, 0)
-                per_node.append(max(bi, bo))
-            time_net = max(per_node, default=0) / self.cost.net_bw
-        time_net += report.placement_extra_bytes / self.cost.net_bw
-
-        # --- join execution (real compute over queried cells)
-        matches: Optional[int] = None
-        work_by_node: Dict[int, int] = {}
-        # Semantic-reuse fast path: a pair with an empty sliced side can
-        # contribute no matches — skip the executor dispatch entirely.
-        # Gated on the reuse knob so a custom ``join_fn`` still sees every
-        # pair under the seed-parity configuration.
-        skip_empty = self.coordinator.reuse == "on"
-        if report.join_plan is not None:
-            tasks: List[JoinTask] = []
-            coords_cache: Dict[int, np.ndarray] = {}
-            for (a, b), node in report.join_plan.pair_node.items():
-                for cid in (a, b):
-                    if cid not in coords_cache:
-                        coords_cache[cid] = self._queried_coords(
-                            cid, cm[cid].file_id, query.box)
-                ca, cb = coords_cache[a], coords_cache[b]
-                work_by_node[node] = (work_by_node.get(node, 0)
-                                      + ca.shape[0] * cb.shape[0])
-                if skip_empty and (ca.shape[0] == 0 or cb.shape[0] == 0):
-                    continue
-                if self.execute_joins:
-                    tasks.append((node, ca, cb, a == b))
-            if self.execute_joins:
-                matches = sum(self.executor.count_pairs(tasks, query.eps))
-        time_compute = (max(work_by_node.values(), default=0)
-                        / self.cost.cell_pairs_per_sec)
-
-        t_opt = report.opt_time_chunking_s + report.opt_time_evict_place_s
-        return ExecutedQuery(report=report, time_scan_s=time_scan,
-                             time_net_s=time_net,
-                             time_compute_s=time_compute,
-                             time_opt_s=t_opt, matches=matches)
 
     def run_query(self, query: SimilarityJoinQuery) -> ExecutedQuery:
         """Admit one query through the coordinator and execute its plan."""
         report = self.coordinator.process_query(query)
-        return self._execute(query, report)
+        return self.backend.execute(query, report)
 
     def run_workload(self, queries: Sequence[SimilarityJoinQuery],
                      batch_size: Optional[int] = None
@@ -301,30 +127,6 @@ class RawArrayCluster:
         for i in range(0, len(queries), batch_size):
             batch = list(queries[i:i + batch_size])
             reports = self.coordinator.process_batch(batch)
-            out.extend(self._execute(q, r)
+            out.extend(self.backend.execute(q, r)
                        for q, r in zip(batch, reports))
         return out
-
-
-def workload_summary(executed: Sequence[ExecutedQuery]) -> Dict[str, float]:
-    """Aggregate modeled times, scan volume, and semantic-reuse counters
-    over an executed workload (the quantities the benchmarks report)."""
-    return {
-        "total_time_s": sum(e.time_total_s for e in executed),
-        "scan_time_s": sum(e.time_scan_s for e in executed),
-        "net_time_s": sum(e.time_net_s for e in executed),
-        "compute_time_s": sum(e.time_compute_s for e in executed),
-        "opt_time_s": sum(e.time_opt_s for e in executed),
-        "bytes_scanned": float(sum(sum(e.report.scan_bytes_by_node.values())
-                                   for e in executed)),
-        "files_scanned": float(sum(len(e.report.files_scanned)
-                                   for e in executed)),
-        "queries": float(len(executed)),
-        "reuse_hits": float(sum(e.report.reuse_hits for e in executed)),
-        "reuse_bytes_served": float(sum(e.report.reuse_bytes_served
-                                        for e in executed)),
-        "residual_bytes_scanned": float(sum(e.report.residual_bytes_scanned
-                                            for e in executed)),
-        "reuse_scan_skips": float(sum(e.report.reuse_scan_skips
-                                      for e in executed)),
-    }

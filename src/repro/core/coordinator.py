@@ -267,6 +267,10 @@ class CacheCoordinator:
                 self.eviction.discard(cid)
         t_evict_place = time.perf_counter() - t0
 
+        # Policy rounds reassign the resident set wholesale; reconcile any
+        # device-backed buffer bindings (no-op without a device backend).
+        self.cache.sync_devices()
+
         if self.reuse == "on":
             # Policy rounds reassign the resident set wholesale; reconcile
             # the coverage index so the next batch's rewrite sees it.

@@ -29,6 +29,10 @@ class JoinPlan:
     pairs: List[Tuple[int, int]]                 # candidate chunk-id pairs
     pair_node: Dict[Tuple[int, int], int]        # pair -> executing node
     transfers: List[Tuple[int, int]]             # (chunk_id, dest node)
+    transfer_routes: List[Tuple[int, int, int]]  # (chunk_id, src, dest):
+    # the same ship decisions as ``transfers`` with the source node
+    # recorded, so a device-backed execution backend can replay each
+    # decision as a real src -> dest transfer.
     bytes_in: Dict[int, int]                     # per-node received bytes
     bytes_out: Dict[int, int]                    # per-node sent bytes
     compute_load: Dict[int, int]                 # per-node cell-pair work
@@ -81,6 +85,7 @@ def plan_join(chunks: Sequence[ChunkMeta],
     bytes_out: Dict[int, int] = {n: 0 for n in range(n_nodes)}
     pair_node: Dict[Tuple[int, int], int] = {}
     transfers: List[Tuple[int, int]] = []
+    routes: List[Tuple[int, int, int]] = []
 
     mean_load_target = (sum(meta[a].n_cells * meta[b].n_cells
                             for a, b in pairs) / max(n_nodes, 1)) or 1.0
@@ -110,6 +115,7 @@ def plan_join(chunks: Sequence[ChunkMeta],
                 src = locations[cid]
                 node_has[n].add(cid)
                 transfers.append((cid, n))
+                routes.append((cid, src, n))
                 bytes_in[n] += wire[cid]
                 bytes_out[src] += wire[cid]
 
@@ -117,5 +123,6 @@ def plan_join(chunks: Sequence[ChunkMeta],
     for cid in meta:
         replicas[cid] = {n for n in range(n_nodes) if cid in node_has[n]}
     return JoinPlan(pairs=pairs, pair_node=pair_node, transfers=transfers,
-                    bytes_in=bytes_in, bytes_out=bytes_out,
-                    compute_load=load, replicas=replicas)
+                    transfer_routes=routes, bytes_in=bytes_in,
+                    bytes_out=bytes_out, compute_load=load,
+                    replicas=replicas)

@@ -9,19 +9,26 @@ from __future__ import annotations
 import jax
 
 
+def auto_axis_kwargs(n_axes: int) -> dict:
+    """``axis_types=(AxisType.Auto,) * n`` where the installed jax has
+    ``jax.sharding.AxisType`` (0.5+); empty kwargs on older releases
+    whose ``make_mesh`` takes no ``axis_types`` (Auto is the default)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """v5e pod mesh: 16x16 (= 256 chips) per pod; 2 pods for multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **auto_axis_kwargs(len(axes)))
 
 
 def make_host_mesh(model_parallel: int = 1) -> jax.sharding.Mesh:
     """Mesh over whatever devices actually exist (tests, examples)."""
     n = len(jax.devices())
     mp = max(1, min(model_parallel, n))
-    return jax.make_mesh(
-        (n // mp, mp), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return jax.make_mesh((n // mp, mp), ("data", "model"),
+                         **auto_axis_kwargs(2))

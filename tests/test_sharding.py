@@ -7,6 +7,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get, reduced
+from repro.launch.mesh import auto_axis_kwargs
 from repro.models.model import init_params
 from repro.sharding.partition import (ShardingPolicy, make_policy,
                                       param_specs)
@@ -14,8 +15,7 @@ from repro.sharding.partition import (ShardingPolicy, make_policy,
 
 def host_mesh(shape=(1, 1), axes=("data", "model")):
     n = len(jax.devices())
-    return jax.make_mesh((1, n), axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return jax.make_mesh((1, n), axes, **auto_axis_kwargs(2))
 
 
 def test_tp_specs_for_attention_and_mlp():
@@ -47,7 +47,7 @@ def test_indivisible_dims_degrade_to_replication():
     # internvl2 vocab 92553 is not divisible by any multi-device axis.
     cfg = get("internvl2-2b")
     mesh = jax.make_mesh((1, len(jax.devices())), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+                         **auto_axis_kwargs(2))
     policy = ShardingPolicy(dp_axes=("data",), fsdp=False)
     aps = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
     specs = param_specs(aps, mesh, policy)
