@@ -1,9 +1,20 @@
 """Kernel micro-benchmarks (interpret mode on CPU — wall time is a
 correctness-path cost, not TPU perf; the derived column reports the
-work done: cell-pairs, attention FLOPs, pages touched)."""
+work done: cell-pairs, attention FLOPs, pages touched, block pairs).
+
+The simjoin section records the kernel perf trajectory: dense vs
+block-sparse (eps-pruned, ``PrefetchScalarGridSpec``) simjoin on
+clustered inputs, plus the clustered GEO workload executed end-to-end
+under both prune modes and both execution backends — match-count parity
+and the ``block_pairs_evaluated / block_pairs_total`` pruning counters.
+``run(out_json=...)`` (the module main writes ``BENCH_kernels.json``)
+serializes all of it so successive PRs can diff kernel performance.
+"""
 from __future__ import annotations
 
+import json
 import time
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +34,114 @@ def _time(fn, *args, n=3, **kwargs):
     return (time.perf_counter() - t0) / n * 1e6
 
 
-def run(print_rows: bool = True):
+def clustered_coords(rng, n: int, d: int = 3, n_clusters: int = 12,
+                     domain: int = 100_000, spread: int = 40) -> np.ndarray:
+    """Clustered integer coordinates (the geo/ptf regime: dense knots in
+    a huge domain) — the distribution block pruning exploits."""
+    centers = rng.integers(0, domain, (n_clusters, d))
+    pick = rng.integers(0, n_clusters, n)
+    return (centers[pick] + rng.integers(-spread, spread + 1,
+                                         (n, d))).astype(np.int32)
+
+
+def run_simjoin_pruning(print_rows: bool = True, n: int = 4096,
+                        eps: int = 64):
+    """Dense vs block-sparse simjoin self-join on clustered coords:
+    timings, block-pair counters, match parity, and the jit trace tally
+    (repeat dispatches must not retrace)."""
+    rng = np.random.default_rng(7)
+    a = clustered_coords(rng, n)
+    aj = jnp.asarray(a)
+    dense_us = _time(sj_ops.count_similar_pairs, aj, aj, eps, True)
+    matches_dense = int(sj_ops.count_similar_pairs(aj, aj, eps, True))
+    matches_pruned, total, evaluated = sj_ops.count_similar_pairs_pruned_np(
+        a, a, eps, True)
+    pruned_us = _time(sj_ops.count_similar_pairs_pruned_np, a, a, eps, True)
+    trace_before = dict(sj_ops.TRACE_COUNTS)
+    for _ in range(3):                         # repeat dispatch: no retrace
+        sj_ops.count_similar_pairs_pruned_np(a, a, eps, True)
+    retraced = dict(sj_ops.TRACE_COUNTS) != trace_before
+    out = {
+        "n": n, "eps": eps, "dense_us": dense_us, "pruned_us": pruned_us,
+        "matches_dense": matches_dense, "matches_pruned": matches_pruned,
+        "match_parity": matches_dense == matches_pruned,
+        "block_pairs_total": total, "block_pairs_evaluated": evaluated,
+        "evaluated_fraction": evaluated / max(total, 1),
+        "retraced_on_repeat": retraced,
+    }
+    if print_rows:
+        print(f"kernel/simjoin_dense_clustered_{n}x3,{dense_us:.0f},{total}")
+        print(f"kernel/simjoin_pruned_clustered_{n}x3,{pruned_us:.0f},"
+              f"{evaluated}")
+        print(f"kernel/simjoin_pruned_fraction,0,"
+              f"{out['evaluated_fraction']:.3f}")
+    return out
+
+
+def run_geo_workload_pruning(print_rows: bool = True):
+    """The clustered GEO workload executed end-to-end (joins for real)
+    under prune=dense and prune=block on the simulated backend, and
+    prune=block on the jax device mesh: identical match counts, and the
+    per-run block-pair counters from ``workload_summary``.
+
+    The dataset/queries are the join-heavy variant of the GEO setup:
+    fewer but denser files, window queries covering half the domain, and
+    chunks kept multi-block (``min_cells=8192``) — the regime where
+    per-pair block pruning has room to act on top of the planner's
+    chunk-level eps-box pruning (at bench_caching's CI scale most chunk
+    pairs are a single 128-block, which nothing can prune further)."""
+    import tempfile
+    from benchmarks.common import N_NODES
+    from repro.arrayio.catalog import FileReader, build_catalog
+    from repro.arrayio.generator import make_geo_files
+    from repro.core.cluster import RawArrayCluster, workload_summary
+    from repro.core.workload import geo_workload
+    files = make_geo_files(n_files=4, n_seeds=300, clones_per_seed=40,
+                           seed=11)
+    catalog, data = build_catalog(files, tempfile.mkdtemp(prefix="bk_geo_"),
+                                  "csv", n_nodes=N_NODES)
+    reader = FileReader(catalog, data)
+    budget = sum(f.n_cells * f.cell_bytes for f in catalog.files) // 8
+    queries = geo_workload(catalog.domain, eps=500, range_frac=0.5)
+    out = {}
+    for backend, prune in (("simulated", "dense"), ("simulated", "block"),
+                           ("jax_mesh", "block")):
+        cluster = RawArrayCluster(
+            catalog, reader, N_NODES, budget // N_NODES, policy="cost",
+            min_cells=8192, execute_joins=True, backend=backend,
+            join_backend="pallas", prune=prune)
+        t0 = time.perf_counter()
+        executed = cluster.run_workload(queries)
+        wall_us = (time.perf_counter() - t0) * 1e6
+        summ = workload_summary(executed)
+        label = f"{backend}_{prune}"
+        out[label] = {
+            "matches": int(sum(e.matches or 0 for e in executed)),
+            "wall_us": wall_us,
+            "block_pairs_total": summ.get("block_pairs_total", 0.0),
+            "block_pairs_evaluated": summ.get("block_pairs_evaluated", 0.0),
+        }
+        if print_rows:
+            print(f"geo_join/{label},{wall_us:.0f},"
+                  f"{out[label]['matches']}")
+            print(f"geo_join/{label}/block_pairs,0,"
+                  f"{out[label]['block_pairs_evaluated']:.0f}/"
+                  f"{out[label]['block_pairs_total']:.0f}")
+    base = out["simulated_dense"]["matches"]
+    parity = all(v["matches"] == base for v in out.values())
+    frac = (out["simulated_block"]["block_pairs_evaluated"]
+            / max(out["simulated_block"]["block_pairs_total"], 1.0))
+    if print_rows:
+        print(f"geo_join/match_parity,0,{int(parity)}")
+        print(f"geo_join/pruned_fraction,0,{frac:.3f}")
+    out["match_parity"] = parity
+    out["pruned_fraction"] = frac
+    return out
+
+
+def run(print_rows: bool = True, out_json: Optional[str] = None):
+    """All kernel rows; ``out_json`` additionally writes the JSON perf
+    trajectory (``BENCH_kernels.json`` from the module main)."""
     rng = np.random.default_rng(0)
     rows = []
     a = jnp.asarray(rng.integers(0, 1000, (512, 3)), jnp.int32)
@@ -46,8 +164,23 @@ def run(print_rows: bool = True):
     if print_rows:
         for name, us, derived in rows:
             print(f"{name},{us:.0f},{derived}")
+    pruning = run_simjoin_pruning(print_rows=print_rows)
+    geo = run_geo_workload_pruning(print_rows=print_rows)
+    if out_json:
+        payload = {
+            "benchmark": "bench_kernels",
+            "platform": jax.default_backend(),
+            "rows": [{"name": n_, "us_per_call": u, "derived": d}
+                     for n_, u, d in rows],
+            "simjoin_pruning": pruning,
+            "geo_workload_pruning": geo,
+        }
+        with open(out_json, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+        if print_rows:
+            print(f"wrote {out_json}")
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    run(out_json="BENCH_kernels.json")

@@ -46,9 +46,11 @@ def run(n_queries: int = 100, print_rows: bool = True):
 
 def run_backends(n_queries: int = 30, print_rows: bool = True):
     """Backend comparison: identical plans executed by the simulated and
-    jax_mesh backends. Rows report the modeled net/compute times for
-    both, and for the mesh backend the MEASURED transfer + join kernel
-    wall-clock and measured shipped device bytes."""
+    jax_mesh backends, each under the dense and block-sparse join grids.
+    Rows report the modeled net/compute times, the block-pair pruning
+    counters (``block_pairs_evaluated/total``), and for the mesh backend
+    the MEASURED transfer + join kernel wall-clock and measured shipped
+    device bytes."""
     from repro.backend import JaxMeshBackend
     catalog, reader = build_ptf("hdf5", n_files=12, cells=1500, seed=33)
     queries = ptf_stress_workload(catalog.domain, n_queries=n_queries,
@@ -56,31 +58,41 @@ def run_backends(n_queries: int = 30, print_rows: bool = True):
                                   anchors=cell_anchors(catalog, reader))
     budget = dataset_bytes(catalog) // 8
     out = {}
-    for backend in ("simulated", "jax_mesh"):
+    matches = {}
+    for backend, prune in (("simulated", "dense"), ("simulated", "block"),
+                           ("jax_mesh", "dense"), ("jax_mesh", "block")):
+        label = f"{backend}_{prune}"
         cluster = RawArrayCluster(
             catalog, reader, N_NODES, budget // N_NODES, policy="cost",
             min_cells=48, execute_joins=True, backend=backend,
-            join_backend="pallas" if backend == "simulated" else "numpy")
+            join_backend="pallas", prune=prune)
         executed, us = timed(cluster.run_workload, queries)
         summ = workload_summary(executed)
-        out[backend] = summ
+        out[label] = summ
+        matches[label] = sum(e.matches or 0 for e in executed)
         if print_rows:
-            print(f"backend/{backend}/modeled_net_s,{us:.0f},"
+            print(f"backend/{label}/modeled_net_s,{us:.0f},"
                   f"{summ['net_time_s']:.4f}")
-            print(f"backend/{backend}/modeled_compute_s,0,"
+            print(f"backend/{label}/modeled_compute_s,0,"
                   f"{summ['compute_time_s']:.4f}")
+            print(f"backend/{label}/block_pairs,0,"
+                  f"{summ.get('block_pairs_evaluated', 0):.0f}/"
+                  f"{summ.get('block_pairs_total', 0):.0f}")
         # make_backend degrades jax_mesh -> simulated when jax is absent;
         # only emit measured rows when the mesh backend actually ran.
         if isinstance(cluster.backend, JaxMeshBackend) and print_rows:
-            print(f"backend/{backend}/measured_net_s,0,"
+            print(f"backend/{label}/measured_net_s,0,"
                   f"{summ['measured_net_s']:.4f}")
-            print(f"backend/{backend}/measured_compute_s,0,"
+            print(f"backend/{label}/measured_compute_s,0,"
                   f"{summ['measured_compute_s']:.4f}")
-            print(f"backend/{backend}/measured_ship_bytes,0,"
+            print(f"backend/{label}/measured_ship_bytes,0,"
                   f"{summ['measured_ship_bytes']:.0f}")
             stats = cluster.backend.device_stats
-            print(f"backend/{backend}/committed_bytes_moved,0,"
+            print(f"backend/{label}/committed_bytes_moved,0,"
                   f"{stats['committed_bytes_moved']:.0f}")
+    if print_rows:
+        parity = len(set(matches.values())) == 1
+        print(f"backend/match_parity,0,{int(parity)}")
     return out
 
 

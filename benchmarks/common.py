@@ -52,7 +52,8 @@ PAPER_DATASET_BYTES = 262e9      # PTF in HDF5 (§4.1)
 def make_cluster(catalog, reader, policy: str, budget_total: int,
                  placement: str = "dynamic",
                  paper_scale: bool = True,
-                 reuse: str = "off") -> RawArrayCluster:
+                 reuse: str = "off",
+                 prune: str = "dense") -> RawArrayCluster:
     # min_cells keeps refined chunks well below one node's cache budget
     # (the paper's regime: GB-scale node budgets vs MB-scale chunks).
     #
@@ -68,10 +69,14 @@ def make_cluster(catalog, reader, policy: str, budget_total: int,
             disk_bw=cm.disk_bw * scale, net_bw=cm.net_bw * scale,
             cell_pairs_per_sec=cm.cell_pairs_per_sec,
             decode_rates={k: v * scale for k, v in cm.decode_rates.items()})
+    # Planner-only benches keep the numpy executor (never called under
+    # execute_joins=False); a non-default prune mode needs pallas.
     return RawArrayCluster(
         catalog, reader, N_NODES, budget_total // N_NODES, policy=policy,
         placement_mode=placement, min_cells=48, cost_model=cm,
-        execute_joins=False, reuse=reuse)
+        execute_joins=False, reuse=reuse,
+        join_backend="numpy" if prune == "dense" else "pallas",
+        prune=prune)
 
 
 def dataset_bytes(catalog: Catalog) -> int:

@@ -26,9 +26,9 @@ from repro.backend.base import (BACKENDS, DeviceBindingListener,
                                 ExecutedQuery, ExecutionBackend,
                                 workload_summary)
 from repro.backend.cost_model import CostModel
-from repro.backend.executors import (JOIN_BACKENDS, JoinTask,
+from repro.backend.executors import (JOIN_BACKENDS, PRUNE_MODES, JoinTask,
                                      NumpyJoinExecutor, PallasJoinExecutor,
-                                     count_similar_pairs_np,
+                                     PreparedBatch, count_similar_pairs_np,
                                      make_join_executor)
 from repro.backend.simulated import SimulatedBackend
 from repro.backend.jax_mesh import JaxMeshBackend, make_backend
@@ -36,7 +36,7 @@ from repro.backend.jax_mesh import JaxMeshBackend, make_backend
 __all__ = [
     "BACKENDS", "CostModel", "DeviceBindingListener", "ExecutedQuery",
     "ExecutionBackend", "JOIN_BACKENDS", "JaxMeshBackend", "JoinTask",
-    "NumpyJoinExecutor", "PallasJoinExecutor", "SimulatedBackend",
-    "count_similar_pairs_np", "make_backend", "make_join_executor",
-    "workload_summary",
+    "NumpyJoinExecutor", "PRUNE_MODES", "PallasJoinExecutor",
+    "PreparedBatch", "SimulatedBackend", "count_similar_pairs_np",
+    "make_backend", "make_join_executor", "workload_summary",
 ]

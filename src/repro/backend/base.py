@@ -51,6 +51,12 @@ class ExecutedQuery:
     measured_net_s: Optional[float] = None      # wall-clock of transfers
     measured_compute_s: Optional[float] = None  # wall-clock of join kernels
     measured_ship_bytes: Optional[int] = None   # device bytes moved
+    # Block-sparsity counters of the Pallas join path (None when the
+    # numpy executor ran or no join executed): *_total is the dense
+    # kernel's grid size over this query's chunk pairs, *_evaluated the
+    # block pairs actually dispatched (equal under prune="dense").
+    block_pairs_total: Optional[int] = None
+    block_pairs_evaluated: Optional[int] = None
 
     @property
     def time_total_s(self) -> float:
@@ -129,4 +135,9 @@ def workload_summary(executed: Sequence[ExecutedQuery]) -> Dict[str, float]:
                                         for e in executed)
         out["measured_ship_bytes"] = float(sum(e.measured_ship_bytes or 0
                                                for e in executed))
+    if any(e.block_pairs_total is not None for e in executed):
+        out["block_pairs_total"] = float(sum(e.block_pairs_total or 0
+                                             for e in executed))
+        out["block_pairs_evaluated"] = float(sum(e.block_pairs_evaluated or 0
+                                                 for e in executed))
     return out

@@ -7,18 +7,48 @@
     grouped, coordinate sets are padded to the kernel's 128-wide BLOCK,
     and shape-bucketed pair batches are dispatched to the
     ``kernels/simjoin`` Pallas kernel (interpret-mode by default, so it
-    runs on CPU CI and compiles on TPU).
+    runs on CPU CI and compiles on TPU). Its ``prune`` knob selects the
+    dense grid (``"dense"``, every block pair evaluated — the parity
+    reference) or the block-sparse grid (``"block"``: coordinates are
+    spatially sorted, per-block bounding boxes pruned against ``eps``
+    on host, and only live block pairs are scalar-prefetched into the
+    kernel — see ``repro.kernels.simjoin.prune``).
+
+Every pallas dispatch records ``last_stats`` (``block_pairs_total`` =
+the dense grid size, ``block_pairs_evaluated`` = block pairs actually
+dispatched), which the backends surface per query on ``ExecutedQuery``.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Sequence, Tuple
+import dataclasses
+import functools
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 JOIN_BACKENDS = ("numpy", "pallas")
+PRUNE_MODES = ("dense", "block")
 
 # One unit of join work: (node, a coords, b coords, self-join?).
 JoinTask = Tuple[int, np.ndarray, np.ndarray, bool]
+
+
+@dataclasses.dataclass
+class PreparedBatch:
+    """One shape bucket's stacked kernel inputs, ready for dispatch.
+
+    ``arrays`` is ``(a_stack, b_stack)`` for the dense grid or
+    ``(a_stack, b_stack, pairs_stack)`` for the block-sparse grid;
+    ``fn_key`` identifies the jitted entry point + static shape bucket
+    (the executor memoizes the bound callable per ``fn_key`` + eps).
+    The mesh backend re-places ``arrays`` onto ``node``'s device before
+    dispatch; ``node`` is ``None`` for node-agnostic bucketing."""
+
+    node: Optional[int]
+    same: bool
+    idxs: List[int]
+    arrays: Tuple[np.ndarray, ...]
+    fn_key: tuple
 
 
 def count_similar_pairs_np(a: np.ndarray, b: np.ndarray, eps: int,
@@ -78,6 +108,9 @@ class NumpyJoinExecutor:
 
     def __init__(self, join_fn: Callable[..., int]):
         self.join_fn = join_fn
+        # Block-pair counters are a kernel-path concept; the numpy
+        # reference has none (ExecutedQuery fields stay None).
+        self.last_stats: Optional[Dict[str, int]] = None
 
     def count_pairs(self, tasks: Sequence[JoinTask], eps: int) -> List[int]:
         """Per-task match counts via the (overridable) numpy predicate."""
@@ -85,7 +118,7 @@ class NumpyJoinExecutor:
 
 
 class PallasJoinExecutor:
-    """Batched executor over the ``kernels/simjoin`` Pallas kernel.
+    """Batched executor over the ``kernels/simjoin`` Pallas kernels.
 
     Each node's chunk-pair tasks are padded to BLOCK and bucketed by
     padded shape and self-join mode; each bucket is dispatched as ONE
@@ -93,41 +126,159 @@ class PallasJoinExecutor:
     handful of jit'd launches per query. Buckets span nodes because the
     simulated backend executes every node's work on this one device; the
     mesh backend (``repro.backend.jax_mesh``) keys buckets by node and
-    pins each bucket to that node's device."""
+    pins each bucket to that node's device.
 
-    def __init__(self, interpret: bool = True):
+    ``prune="block"`` switches buckets to the block-sparse kernel: per
+    task the coordinates are spatially sorted, live block pairs computed
+    on host (min L1 box distance ``<= eps``), and the pair list —
+    padded to a power-of-two bucket length so pair-count jitter does not
+    retrace — scalar-prefetched into the kernel. ``prune="dense"`` (the
+    default) keeps the full grid for parity testing and as fallback.
+
+    The jitted batch callable for every ``(kernel, same, shapes, eps)``
+    bucket key is memoized in ``_fn_cache``: repeated same-shape queries
+    dispatch through the SAME bound callable, so jax's jit cache is hit
+    without re-binding statics (``ops.TRACE_COUNTS`` proves no retrace).
+    """
+
+    def __init__(self, interpret: bool = True, prune: str = "dense"):
         # Imported lazily so the numpy backend never pulls in jax.
-        from repro.kernels.simjoin import ops, simjoin
+        from repro.kernels.simjoin import ops, prune as prune_mod, simjoin
+        if prune not in PRUNE_MODES:
+            raise ValueError(f"unknown prune mode {prune!r}; "
+                             f"known: {PRUNE_MODES}")
         self._ops = ops
+        self._prune = prune_mod
         self._block = simjoin.BLOCK
         self._sentinel = simjoin.SENTINEL
         self.interpret = interpret
+        self.prune = prune
+        self._fn_cache: Dict[tuple, Callable] = {}
+        self.last_stats: Optional[Dict[str, int]] = None
 
-    def count_pairs(self, tasks: Sequence[JoinTask], eps: int) -> List[int]:
-        """Per-task match counts via bucketed batched kernel dispatch."""
-        import jax.numpy as jnp
-        counts = [0] * len(tasks)
-        for (same, _, _), idxs in bucket_by_shape(tasks,
-                                                  self._block).items():
+    # ------------------------------------------------- batch preparation
+
+    def iter_batches(self, tasks: Sequence[JoinTask], eps: int,
+                     by_node: bool = False
+                     ) -> Tuple[List[PreparedBatch], Dict[str, int]]:
+        """Bucket and stack the tasks' kernel inputs (dense or pruned per
+        the ``prune`` knob); returns ``(batches, stats)`` where stats
+        carries the query's ``block_pairs_total`` / ``_evaluated``."""
+        if self.prune == "block":
+            return self._batches_block(tasks, eps, by_node)
+        return self._batches_dense(tasks, by_node)
+
+    def _batches_dense(self, tasks: Sequence[JoinTask], by_node: bool
+                       ) -> Tuple[List[PreparedBatch], Dict[str, int]]:
+        """Dense grid: every block pair of every bucketed task runs."""
+        batches: List[PreparedBatch] = []
+        total = 0
+        for key, idxs in bucket_by_shape(tasks, self._block,
+                                         by_node=by_node).items():
+            node = key[0] if by_node else None
+            same, na, nb = key[-3:]
             a_stack, b_stack = stack_bucket(tasks, idxs, self._ops,
                                             self._sentinel)
-            got = self._ops.count_similar_pairs_batch(
-                jnp.asarray(a_stack), jnp.asarray(b_stack), int(eps),
-                bool(same), interpret=self.interpret)
-            for i, c in zip(idxs, np.asarray(got)):
+            total += (na // self._block) * (nb // self._block) * len(idxs)
+            batches.append(PreparedBatch(
+                node=node, same=same, idxs=list(idxs),
+                arrays=(a_stack, b_stack),
+                fn_key=("dense", same, na, nb)))
+        return batches, {"block_pairs_total": total,
+                         "block_pairs_evaluated": total}
+
+    def _batches_block(self, tasks: Sequence[JoinTask], eps: int,
+                       by_node: bool
+                       ) -> Tuple[List[PreparedBatch], Dict[str, int]]:
+        """Block-sparse grid: sort, prune, and pad each task's pair
+        list; tasks with no surviving block pair skip dispatch (their
+        count is provably zero)."""
+        total = evaluated = 0
+        prepped: Dict[int, tuple] = {}
+        buckets: Dict[tuple, List[int]] = {}
+        for i, (node, a, b, same) in enumerate(tasks):
+            if a.shape[0] == 0 or b.shape[0] == 0:
+                continue
+            a_s = self._prune.spatial_sort(a)
+            b_s = a_s if same else self._prune.spatial_sort(b)
+            pairs, dense_total = self._prune.build_block_pairs(
+                a_s, b_s, self._block, int(eps), bool(same))
+            total += dense_total
+            if pairs.shape[0] == 0:
+                continue
+            evaluated += pairs.shape[0]
+            na = -(-a.shape[0] // self._block) * self._block
+            nb = -(-b.shape[0] // self._block) * self._block
+            plen = self._prune.padded_pair_len(pairs.shape[0])
+            key = ((node,) if by_node else ()) + (same, na, nb, plen)
+            prepped[i] = (a_s, b_s, pairs)
+            buckets.setdefault(key, []).append(i)
+        batches: List[PreparedBatch] = []
+        for key, idxs in buckets.items():
+            node = key[0] if by_node else None
+            same, na, nb, plen = key[-4:]
+            a_stack = np.stack([self._ops.pad_cm_np(prepped[i][0],
+                                                    self._sentinel)
+                                for i in idxs])
+            b_stack = np.stack([self._ops.pad_cm_np(prepped[i][1],
+                                                    -self._sentinel)
+                                for i in idxs])
+            p_stack = np.stack([self._prune.pad_pairs(prepped[i][2], plen)
+                                for i in idxs])
+            batches.append(PreparedBatch(
+                node=node, same=same, idxs=list(idxs),
+                arrays=(a_stack, b_stack, p_stack),
+                fn_key=("block", same, na, nb, plen)))
+        return batches, {"block_pairs_total": total,
+                         "block_pairs_evaluated": evaluated}
+
+    # ---------------------------------------------------------- dispatch
+
+    def dispatch(self, batch: PreparedBatch, eps: int,
+                 arrays: Optional[tuple] = None):
+        """Run one prepared batch through its memoized jitted entry;
+        returns the (k,) per-task match-count device array. ``arrays``
+        overrides ``batch.arrays`` with device-placed copies (the mesh
+        backend pins them to the executing node's device first)."""
+        key = batch.fn_key + (int(eps), self.interpret)
+        fn = self._fn_cache.get(key)
+        if fn is None:
+            base = (self._ops.count_similar_pairs_batch
+                    if batch.fn_key[0] == "dense"
+                    else self._ops.count_similar_pairs_pruned_batch)
+            fn = functools.partial(base, eps=int(eps), same=batch.same,
+                                   interpret=self.interpret)
+            self._fn_cache[key] = fn
+        return fn(*(arrays if arrays is not None else batch.arrays))
+
+    def count_pairs(self, tasks: Sequence[JoinTask], eps: int) -> List[int]:
+        """Per-task match counts via bucketed batched kernel dispatch;
+        records the query's block-pair counters in ``last_stats``."""
+        counts = [0] * len(tasks)
+        batches, stats = self.iter_batches(tasks, eps)
+        for batch in batches:
+            got = np.asarray(self.dispatch(batch, eps))
+            for i, c in zip(batch.idxs, got):
                 counts[i] = int(c)
+        self.last_stats = stats
         return counts
 
 
 def make_join_executor(backend: str, join_fn: Callable[..., int],
-                       interpret: bool = True):
+                       interpret: bool = True, prune: str = "dense"):
     """Build a join executor for ``backend``, degrading pallas -> numpy
-    with a warning when jax is unavailable."""
+    with a warning when jax is unavailable. ``prune`` selects the pallas
+    grid (``"dense"`` full grid / ``"block"`` block-sparse) and is
+    rejected for the numpy executor, which has no block structure."""
     if backend == "numpy":
+        if prune != "dense":
+            raise ValueError(
+                f"prune={prune!r} requires the pallas join backend; the "
+                f"numpy executor has no block grid to prune")
         return NumpyJoinExecutor(join_fn)
     if backend == "pallas":
         try:
-            return PallasJoinExecutor(interpret=interpret)
+            return PallasJoinExecutor(interpret=interpret, prune=prune)
         except ImportError as e:                 # jax not available: degrade
             import warnings
             warnings.warn(f"join_backend='pallas' unavailable ({e}); "

@@ -66,16 +66,17 @@ class JaxMeshBackend(SimulatedBackend):
     def __init__(self, n_nodes: int, cost_model: Optional[CostModel] = None,
                  devices: Optional[Sequence[Any]] = None,
                  compiled: Optional[bool] = None,
-                 execute_joins: bool = True):
+                 execute_joins: bool = True, prune: str = "dense"):
         import jax
         from jax.sharding import Mesh
         # The mesh backend always joins through the Pallas kernel; the
-        # simulated parent's executor field is unused but kept coherent.
+        # simulated parent's executor field holds the dispatch cache and
+        # the prune preprocessing shared with the per-node path here.
         interpret = not (compiled_mode_supported() if compiled is None
                          else compiled)
         super().__init__(n_nodes, cost_model=cost_model,
                          join_backend="pallas", execute_joins=execute_joins,
-                         interpret=interpret)
+                         interpret=interpret, prune=prune)
         self.interpret = interpret
         self.devices = tuple(devices if devices is not None
                              else jax.devices())
@@ -89,15 +90,12 @@ class JaxMeshBackend(SimulatedBackend):
                 f"--xla_force_host_platform_device_count={n_nodes} for "
                 f"one CPU device per node.", RuntimeWarning, stacklevel=2)
         self.mesh = Mesh(np.array(self.devices), ("node",))
-        # The parent already built a PallasJoinExecutor; share its kernel
-        # handles rather than re-importing them.
+        # The parent already built a PallasJoinExecutor; per-node dispatch
+        # goes through its iter_batches/dispatch seam below.
         from repro.backend.executors import PallasJoinExecutor
         if not isinstance(self.executor, PallasJoinExecutor):
             raise ImportError(
                 "jax_mesh backend requires the Pallas simjoin kernel")
-        self._ops = self.executor._ops
-        self._block = self.executor._block
-        self._sentinel = self.executor._sentinel
         # Committed cache buffers: chunk id -> device array, and the node
         # whose device currently holds it (the CacheState.locations view).
         self._buffers: Dict[int, Any] = {}
@@ -251,35 +249,33 @@ class JaxMeshBackend(SimulatedBackend):
         return total_s, total_b
 
     def _dispatch_joins(self, tasks, eps: int
-                        ) -> Tuple[Optional[int], float]:
+                        ) -> Tuple[Optional[int], float, Dict[str, int]]:
         """Shape-bucketed per-node Pallas dispatch: every bucket's stacked
-        batch is placed on its node's device before the kernel call, so
+        batch (dense or block-sparse per the executor's ``prune`` knob)
+        is placed on its node's device before the kernel call, so
         compilation and execution happen per device. Returns (total match
-        count, measured compute seconds = max over nodes, the §4.1
-        ``max_n`` convention applied to measured per-node wall-clock)."""
+        count, measured compute seconds = max over nodes — the §4.1
+        ``max_n`` convention applied to measured per-node wall-clock —
+        and the query's block-pair counters)."""
         import jax
         import jax.numpy as jnp
-        from repro.backend.executors import bucket_by_shape, stack_bucket
         node_time: Dict[int, float] = {}
         total = 0
-        buckets = bucket_by_shape(tasks, self._block, by_node=True)
-        for (node, same, _, _), idxs in buckets.items():
-            a_stack, b_stack = stack_bucket(tasks, idxs, self._ops,
-                                            self._sentinel)
-            dev = self.device_for_node(node)
-            a_dev = jax.device_put(jnp.asarray(a_stack), dev)
-            b_dev = jax.device_put(jnp.asarray(b_stack), dev)
-            a_dev.block_until_ready()
-            b_dev.block_until_ready()
+        batches, stats = self.executor.iter_batches(tasks, eps,
+                                                    by_node=True)
+        for batch in batches:
+            dev = self.device_for_node(batch.node)
+            arrays = tuple(jax.device_put(jnp.asarray(x), dev)
+                           for x in batch.arrays)
+            for x in arrays:
+                x.block_until_ready()
             t0 = time.perf_counter()
-            got = self._ops.count_similar_pairs_batch(
-                a_dev, b_dev, int(eps), bool(same),
-                interpret=self.interpret)
+            got = self.executor.dispatch(batch, eps, arrays=arrays)
             got.block_until_ready()
-            node_time[node] = (node_time.get(node, 0.0)
-                               + time.perf_counter() - t0)
+            node_time[batch.node] = (node_time.get(batch.node, 0.0)
+                                     + time.perf_counter() - t0)
             total += int(np.asarray(got).sum())
-        return total, max(node_time.values(), default=0.0)
+        return total, max(node_time.values(), default=0.0), stats
 
     def execute(self, query: "SimilarityJoinQuery",
                 report: "QueryReport") -> ExecutedQuery:
@@ -308,9 +304,13 @@ class JaxMeshBackend(SimulatedBackend):
         measured_net, measured_bytes = self._ship(report, coords_of)
         matches: Optional[int] = None
         measured_compute = 0.0
+        bp_total: Optional[int] = None
+        bp_eval: Optional[int] = None
         if report.join_plan is not None and self.execute_joins:
-            matches, measured_compute = self._dispatch_joins(
+            matches, measured_compute, stats = self._dispatch_joins(
                 tasks, query.eps)
+            bp_total = stats["block_pairs_total"]
+            bp_eval = stats["block_pairs_evaluated"]
         time_compute = (max(work_by_node.values(), default=0)
                         / self.cost.cell_pairs_per_sec)
         t_opt = report.opt_time_chunking_s + report.opt_time_evict_place_s
@@ -321,7 +321,9 @@ class JaxMeshBackend(SimulatedBackend):
                              backend=self.name,
                              measured_net_s=measured_net,
                              measured_compute_s=measured_compute,
-                             measured_ship_bytes=measured_bytes)
+                             measured_ship_bytes=measured_bytes,
+                             block_pairs_total=bp_total,
+                             block_pairs_evaluated=bp_eval)
 
 
 def make_backend(backend: str, n_nodes: int,
@@ -329,13 +331,16 @@ def make_backend(backend: str, n_nodes: int,
                  join_fn: Optional[Callable[..., int]] = None,
                  join_backend: str = "numpy", execute_joins: bool = True,
                  devices: Optional[Sequence[Any]] = None,
-                 compiled: Optional[bool] = None) -> SimulatedBackend:
+                 compiled: Optional[bool] = None,
+                 prune: str = "dense") -> SimulatedBackend:
     """Build an execution backend by name, degrading ``jax_mesh`` ->
-    ``simulated`` with a warning when jax is unavailable."""
+    ``simulated`` with a warning when jax is unavailable. ``prune``
+    selects the Pallas join grid (``"dense"`` / ``"block"``-sparse) and
+    applies to any backend that joins through the Pallas kernel."""
     if backend == "simulated":
         return SimulatedBackend(n_nodes, cost_model=cost_model,
                                 join_fn=join_fn, join_backend=join_backend,
-                                execute_joins=execute_joins)
+                                execute_joins=execute_joins, prune=prune)
     if backend == "jax_mesh":
         if join_fn is not None:
             raise ValueError(
@@ -345,7 +350,7 @@ def make_backend(backend: str, n_nodes: int,
         try:
             return JaxMeshBackend(n_nodes, cost_model=cost_model,
                                   devices=devices, compiled=compiled,
-                                  execute_joins=execute_joins)
+                                  execute_joins=execute_joins, prune=prune)
         except ImportError as e:
             warnings.warn(f"backend='jax_mesh' unavailable ({e}); "
                           f"falling back to the simulated backend",

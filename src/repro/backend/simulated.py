@@ -35,13 +35,13 @@ class SimulatedBackend:
     def __init__(self, n_nodes: int, cost_model: Optional[CostModel] = None,
                  join_fn: Optional[Callable[..., int]] = None,
                  join_backend: str = "numpy", execute_joins: bool = True,
-                 interpret: bool = True):
+                 interpret: bool = True, prune: str = "dense"):
         self.n_nodes = n_nodes
         self.cost = cost_model or CostModel()
         self.join_fn = join_fn or count_similar_pairs_np
         self.execute_joins = execute_joins
         self.executor = make_join_executor(join_backend, self.join_fn,
-                                           interpret=interpret)
+                                           interpret=interpret, prune=prune)
         self.coordinator: Optional["CacheCoordinator"] = None
 
     # ------------------------------------------------------------- binding
@@ -127,9 +127,15 @@ class SimulatedBackend:
         time_net = self.modeled_net_time(report)
 
         matches: Optional[int] = None
+        bp_total: Optional[int] = None
+        bp_eval: Optional[int] = None
         tasks, work_by_node, _ = self.gather_join_tasks(query, report)
         if report.join_plan is not None and self.execute_joins:
             matches = sum(self.executor.count_pairs(tasks, query.eps))
+            stats = getattr(self.executor, "last_stats", None)
+            if stats is not None:
+                bp_total = stats["block_pairs_total"]
+                bp_eval = stats["block_pairs_evaluated"]
         time_compute = (max(work_by_node.values(), default=0)
                         / self.cost.cell_pairs_per_sec)
 
@@ -138,4 +144,6 @@ class SimulatedBackend:
                              time_net_s=time_net,
                              time_compute_s=time_compute,
                              time_opt_s=t_opt, matches=matches,
-                             backend=self.name)
+                             backend=self.name,
+                             block_pairs_total=bp_total,
+                             block_pairs_evaluated=bp_eval)

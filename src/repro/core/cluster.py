@@ -27,7 +27,12 @@ Join execution backends for the simulated path (``join_backend``):
   * ``"pallas"`` — the batched executor: BLOCK-padded, shape-bucketed
     pair batches dispatched to the ``kernels/simjoin`` Pallas kernel
     (interpret-mode by default, so it runs on CPU CI and compiles on
-    TPU).
+    TPU). Its ``prune`` knob selects the dense grid (``"dense"``,
+    default — every block pair evaluated) or the block-sparse grid
+    (``"block"`` — spatially sorted coordinates, host-pruned block
+    pairs scalar-prefetched into the kernel; identical match counts,
+    a fraction of the block-pair work, reported per query as
+    ``ExecutedQuery.block_pairs_evaluated / block_pairs_total``).
 
 This module re-exports the cost model, executors, ``ExecutedQuery``, and
 ``workload_summary`` from ``repro.backend`` so seed-era imports keep
@@ -66,7 +71,8 @@ class RawArrayCluster:
                  reuse: str = "off",
                  backend: str = "simulated",
                  devices: Optional[Sequence[Any]] = None,
-                 compiled: Optional[bool] = None):
+                 compiled: Optional[bool] = None,
+                 prune: str = "dense"):
         if join_fn is not None and join_backend != "numpy":
             raise ValueError(
                 "join_fn overrides the join predicate of the numpy "
@@ -78,7 +84,7 @@ class RawArrayCluster:
         self.backend = make_backend(
             backend, n_nodes, cost_model=cost_model, join_fn=join_fn,
             join_backend=join_backend, execute_joins=execute_joins,
-            devices=devices, compiled=compiled)
+            devices=devices, compiled=compiled, prune=prune)
         self.coordinator = CacheCoordinator(
             catalog, reader, n_nodes, node_budget_bytes, policy=policy,
             placement_mode=placement_mode, min_cells=min_cells,

@@ -1,3 +1,8 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the compute hot-spots the paper optimizes.
+
+OPTIONAL layer. Add ``<name>.py`` (or ``.cu``) + ``ops.py`` + ``ref.py``
+ONLY for compute hot-spots the paper itself optimizes with a custom
+kernel; each kernel package ships a jit'd ops wrapper and a pure-jnp
+oracle. ``simjoin`` carries both the dense grid and the block-sparse
+(eps-pruned, scalar-prefetched) variant the join executors dispatch.
+"""

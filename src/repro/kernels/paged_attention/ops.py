@@ -11,5 +11,7 @@ from repro.kernels.paged_attention.paged_attention import paged_attention
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def paged_decode_attention(q, k_pages, v_pages, page_table, seq_lens,
                            interpret: bool = True):
+    """jit'd entry for the paged decode-attention kernel (see
+    ``paged_attention.paged_attention`` for shapes and semantics)."""
     return paged_attention(q, k_pages, v_pages, page_table, seq_lens,
                            interpret=interpret)

@@ -13,6 +13,8 @@ NEG_INF = -1e30
 def paged_attention_ref(q: jax.Array, k_pages: jax.Array,
                         v_pages: jax.Array, page_table: jax.Array,
                         seq_lens: jax.Array) -> jax.Array:
+    """Reference decode attention over a paged KV cache: gather each
+    request's pages dense, mask past ``seq_lens``, softmax-attend."""
     b, h, d = q.shape
     np_, ps, hk, _ = k_pages.shape
     maxp = page_table.shape[1]

@@ -1,15 +1,29 @@
-"""jit'd wrapper around the simjoin Pallas kernel: padding, sentinel
-injection, block-count reduction, and a numpy-friendly entry point usable as
-``RawArrayCluster.join_fn``."""
+"""jit'd wrappers around the simjoin Pallas kernels: padding, sentinel
+injection, block-count reduction, numpy-friendly entry points usable as
+``RawArrayCluster.join_fn``, and the pruned (block-sparse) variants fed
+by the host-side ``repro.kernels.simjoin.prune`` preprocessing.
+
+``TRACE_COUNTS`` tallies how often each jitted entry point is *traced*
+(the counter bumps run at trace time only): repeated same-shape
+dispatches must not grow it — the no-recompile guarantee
+``tests/test_simjoin_pruning.py`` asserts and ``BENCH_kernels.json``
+records."""
 from __future__ import annotations
 
+import collections
 import functools
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.simjoin.simjoin import BLOCK, SENTINEL, simjoin_block_counts
+from repro.kernels.simjoin.simjoin import (BLOCK, SENTINEL,
+                                           simjoin_block_counts,
+                                           simjoin_pruned_block_counts)
+
+# Entry-point name -> times jax traced it (bumped at trace time only).
+TRACE_COUNTS: "collections.Counter[str]" = collections.Counter()
 
 
 def _pad_cm(x: jax.Array, sentinel: int) -> jax.Array:
@@ -28,6 +42,7 @@ def count_similar_pairs(a: jax.Array, b: jax.Array, eps: int, same: bool,
                         interpret: bool = True) -> jax.Array:
     """Unordered L1-neighbor pair count between coordinate sets (see
     ref.count_pairs_ref)."""
+    TRACE_COUNTS["count_similar_pairs"] += 1
     at = _pad_cm(a, SENTINEL)
     bt = _pad_cm(b, -SENTINEL)
     counts = simjoin_block_counts(at, bt, eps, same, interpret=interpret)
@@ -67,8 +82,68 @@ def count_similar_pairs_batch(a_stack: jax.Array, b_stack: jax.Array,
     counts — one kernel dispatch chain per shape bucket instead of one
     per chunk pair. ``lax.map`` keeps the per-element grid (and thus the
     self-join ``program_id`` masking) identical to the unbatched call."""
+    TRACE_COUNTS["batch"] += 1
+
     def one(ab):
         a, b = ab
         return simjoin_block_counts(a, b, eps, same,
                                     interpret=interpret).sum()
     return jax.lax.map(one, (a_stack, b_stack)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "same", "interpret"))
+def count_similar_pairs_pruned(a_cm: jax.Array, b_cm: jax.Array,
+                               pairs: jax.Array, eps: int, same: bool,
+                               interpret: bool = True) -> jax.Array:
+    """Block-sparse pair counting for ONE coordinate-set pair:
+    ``a_cm``/``b_cm`` are (d, N) coordinate-major sets already spatially
+    sorted and sentinel-padded on host (``prune.spatial_sort`` +
+    :func:`pad_cm_np`), ``pairs`` the (P, 3) live block-pair list from
+    ``prune.build_block_pairs``. Returns the scalar int32 match count."""
+    TRACE_COUNTS["pruned"] += 1
+    return simjoin_pruned_block_counts(
+        a_cm, b_cm, pairs, eps, same,
+        interpret=interpret).sum().astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "same", "interpret"))
+def count_similar_pairs_pruned_batch(a_stack: jax.Array, b_stack: jax.Array,
+                                     pairs_stack: jax.Array, eps: int,
+                                     same: bool,
+                                     interpret: bool = True) -> jax.Array:
+    """Batched block-sparse pair counting: (k, d, Na) / (k, d, Nb)
+    coordinate-major stacks plus a (k, P, 3) pair-list stack (every
+    element's live pairs padded to the bucket's P with ``valid == 0``
+    rows, see ``prune.pad_pairs``). Returns (k,) int32 match counts."""
+    TRACE_COUNTS["pruned_batch"] += 1
+
+    def one(abp):
+        a, b, pr = abp
+        return simjoin_pruned_block_counts(a, b, pr, eps, same,
+                                           interpret=interpret).sum()
+    return jax.lax.map(one, (a_stack, b_stack, pairs_stack)).astype(jnp.int32)
+
+
+def count_similar_pairs_pruned_np(a: np.ndarray, b: np.ndarray, eps: int,
+                                  same: bool, interpret: bool = True
+                                  ) -> Tuple[int, int, int]:
+    """Full host pipeline for one pair — sort, prune, pad, dispatch —
+    returning ``(match_count, block_pairs_total, block_pairs_evaluated)``
+    where *total* is the dense kernel's grid size and *evaluated* the
+    live pairs actually dispatched. Used by benchmarks and parity tests;
+    the batched executor path lives in ``repro.backend.executors``."""
+    from repro.kernels.simjoin import prune
+    if a.shape[0] == 0 or b.shape[0] == 0:
+        return 0, 0, 0
+    a_s = prune.spatial_sort(np.asarray(a))
+    b_s = a_s if same else prune.spatial_sort(np.asarray(b))
+    pairs, total = prune.build_block_pairs(a_s, b_s, BLOCK, int(eps),
+                                           bool(same))
+    if pairs.shape[0] == 0:
+        return 0, total, 0
+    at = pad_cm_np(a_s, SENTINEL)
+    bt = pad_cm_np(b_s, -SENTINEL)
+    got = count_similar_pairs_pruned(jnp.asarray(at), jnp.asarray(bt),
+                                     jnp.asarray(pairs), int(eps),
+                                     bool(same), interpret=interpret)
+    return int(got), total, int(pairs.shape[0])

@@ -10,6 +10,19 @@ VPU blocks, emitting per-block-pair match counts.
 Self-join mode masks the upper triangle (i < j) using global indices so each
 unordered pair counts once. Padded cells use +/- sentinel coordinates whose
 distance always exceeds eps.
+
+Two kernel variants share the block-pair body:
+
+  * ``simjoin_block_counts`` — the dense grid: every ``(Na/128, Nb/128)``
+    block pair is evaluated (kept for parity testing and as the fallback
+    when coordinates are not spatially coherent);
+  * ``simjoin_pruned_block_counts`` — the block-sparse grid: the host
+    sorts each coordinate set spatially, computes per-block bounding
+    boxes, keeps only block pairs whose minimal L1 box distance is
+    ``<= eps`` (``repro.kernels.simjoin.prune``), and scalar-prefetches
+    the surviving ``(i, j)`` pair list (the in-repo ``paged_attention``
+    ``PrefetchScalarGridSpec`` pattern) so the grid iterates ONLY live
+    pairs — O(live pairs) instead of O(all block pairs) work.
 """
 from __future__ import annotations
 
@@ -18,14 +31,18 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 BLOCK = 128
 SENTINEL = 1 << 20
 
 
-def _simjoin_kernel(a_ref, b_ref, out_ref, *, eps: int, same: bool,
-                    ndim: int):
-    """a_ref: (d, BLOCK) int32; b_ref: (d, BLOCK) int32; out: (1, 1) int32."""
+def _block_pair_count(a_ref, b_ref, i_block, j_block, *, eps: int,
+                      same: bool, ndim: int):
+    """Shared block-pair body: L1 matches between one (d, BLOCK) pair,
+    with self-join dedup (global ``i < j``) reconstructed from the
+    pair's block indices — ``program_id`` on the dense grid, the
+    scalar-prefetched pair list on the block-sparse grid."""
     dist = jnp.zeros((BLOCK, BLOCK), jnp.int32)
     for k in range(ndim):
         ak = a_ref[k, :]                       # (BLOCK,)
@@ -33,12 +50,20 @@ def _simjoin_kernel(a_ref, b_ref, out_ref, *, eps: int, same: bool,
         dist = dist + jnp.abs(ak[:, None] - bk[None, :])
     hit = dist <= eps
     if same:
-        i = pl.program_id(0) * BLOCK + jax.lax.broadcasted_iota(
+        i = i_block * BLOCK + jax.lax.broadcasted_iota(
             jnp.int32, (BLOCK, BLOCK), 0)
-        j = pl.program_id(1) * BLOCK + jax.lax.broadcasted_iota(
+        j = j_block * BLOCK + jax.lax.broadcasted_iota(
             jnp.int32, (BLOCK, BLOCK), 1)
         hit = jnp.logical_and(hit, i < j)
-    out_ref[0, 0] = jnp.sum(hit.astype(jnp.int32))
+    return jnp.sum(hit.astype(jnp.int32))
+
+
+def _simjoin_kernel(a_ref, b_ref, out_ref, *, eps: int, same: bool,
+                    ndim: int):
+    """a_ref: (d, BLOCK) int32; b_ref: (d, BLOCK) int32; out: (1, 1) int32."""
+    out_ref[0, 0] = _block_pair_count(
+        a_ref, b_ref, pl.program_id(0), pl.program_id(1), eps=eps,
+        same=same, ndim=ndim)
 
 
 def simjoin_block_counts(a: jax.Array, b: jax.Array, eps: int, same: bool,
@@ -61,3 +86,50 @@ def simjoin_block_counts(a: jax.Array, b: jax.Array, eps: int, same: bool,
         out_shape=jax.ShapeDtypeStruct(grid, jnp.int32),
         interpret=interpret,
     )(a, b)
+
+
+def _simjoin_pruned_kernel(pairs_ref, a_ref, b_ref, out_ref, *, eps: int,
+                           same: bool, ndim: int):
+    """pairs_ref: (P, 3) int32 scalar-prefetch rows ``(block_i, block_j,
+    valid)``; a_ref/b_ref: the (d, BLOCK) blocks the pair list selected;
+    out: (1, 1) int32. Rows padded onto a bucket's pair list carry
+    ``valid == 0`` and contribute nothing (their loaded blocks are
+    arbitrary but the count is multiplied away)."""
+    p = pl.program_id(0)
+    out_ref[0, 0] = _block_pair_count(
+        a_ref, b_ref, pairs_ref[p, 0], pairs_ref[p, 1], eps=eps,
+        same=same, ndim=ndim) * pairs_ref[p, 2]
+
+
+def simjoin_pruned_block_counts(a: jax.Array, b: jax.Array,
+                                pairs: jax.Array, eps: int, same: bool,
+                                interpret: bool = True) -> jax.Array:
+    """Block-sparse simjoin: evaluate ONLY the scalar-prefetched block
+    pairs. ``a``: (d, Na), ``b``: (d, Nb) int32 coordinate-major sets,
+    Na/Nb multiples of BLOCK, spatially sorted and sentinel-padded on
+    host (``prune.spatial_sort`` + ``ops.pad_cm_np``); ``pairs``: (P, 3)
+    int32 ``(block_i, block_j, valid)`` rows from
+    ``prune.build_block_pairs``. Returns (P, 1) int32 per-pair match
+    counts (zero for ``valid == 0`` padding rows)."""
+    d, na = a.shape
+    _, nb = b.shape
+    assert na % BLOCK == 0 and nb % BLOCK == 0, (na, nb)
+    n_pairs = pairs.shape[0]
+    assert n_pairs > 0, "empty pair list: skip the kernel call entirely"
+    kernel = functools.partial(_simjoin_pruned_kernel, eps=eps, same=same,
+                               ndim=d)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_pairs,),
+        in_specs=[
+            pl.BlockSpec((d, BLOCK), lambda p, pr: (0, pr[p, 0])),
+            pl.BlockSpec((d, BLOCK), lambda p, pr: (0, pr[p, 1])),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda p, pr: (p, 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_pairs, 1), jnp.int32),
+        interpret=interpret,
+    )(pairs, a, b)

@@ -141,6 +141,48 @@ def test_invariants_under_random_workload(seed, min_cells):
 
 # -------------------------------------------------------- simjoin kernel
 
+@given(st.lists(st.tuples(st.integers(0, 300), st.integers(0, 300)),
+                min_size=1, max_size=60),
+       st.lists(st.tuples(st.integers(0, 300), st.integers(0, 300)),
+                min_size=1, max_size=60),
+       st.integers(1, 16))
+@settings(max_examples=50, deadline=None)
+def test_min_l1_box_dist_lower_bounds_cell_distance(pts_a, pts_b, block):
+    """Soundness of the block prune: the minimal L1 distance between two
+    blocks' bounding boxes never exceeds the L1 distance of ANY cell
+    pair drawn from the two blocks — so dropping block pairs with box
+    distance > eps cannot drop a matching cell pair. (Pure numpy: the
+    prune module never imports jax.)"""
+    from repro.kernels.simjoin.prune import block_bounds, min_l1_box_dist
+    a = np.asarray(pts_a, dtype=np.int64)
+    b = np.asarray(pts_b, dtype=np.int64)
+    lo_a, hi_a = block_bounds(a, block)
+    lo_b, hi_b = block_bounds(b, block)
+    dmat = min_l1_box_dist(lo_a, hi_a, lo_b, hi_b)
+    for i in range(a.shape[0]):
+        for j in range(b.shape[0]):
+            cell_dist = int(np.abs(a[i] - b[j]).sum())
+            assert dmat[i // block, j // block] <= cell_dist
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 300), st.integers(0, 6))
+@settings(max_examples=25, deadline=None)
+def test_pruned_simjoin_property_random(seed, n, eps):
+    """Pruned-vs-oracle parity over random self-joins (block-boundary
+    sizes and eps=0 included by generation)."""
+    pytest.importorskip("jax")
+    from repro.kernels.simjoin import ops
+    from repro.kernels.simjoin.ref import count_pairs_ref
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 40, size=(n, 2)).astype(np.int32)
+    got, total, evaluated = ops.count_similar_pairs_pruned_np(a, a, eps,
+                                                              True)
+    want = int(count_pairs_ref(jnp.asarray(a), jnp.asarray(a), eps, True))
+    assert got == want
+    assert evaluated <= total
+
+
 @given(st.integers(0, 2**31 - 1), st.integers(1, 80), st.integers(1, 80),
        st.integers(0, 4))
 @settings(max_examples=20, deadline=None)

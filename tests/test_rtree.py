@@ -98,3 +98,60 @@ def test_pruning_via_overlapping():
     # After refinement the middle void is carved out: a query in the void
     # overlaps no leaf -> the file can be pruned without scanning.
     assert t.overlapping(Box((20, 20), (30, 30))) == []
+
+
+def _best_split_reference(chunk, pts, query):
+    """The pre-vectorization _best_split loop, kept as the oracle for
+    the one-pass masked min/max implementation (identical choice,
+    including first-strict-minimum tie-breaking in candidate order)."""
+    from repro.core.geometry import split_boundaries
+    candidates = split_boundaries(query, chunk.box)
+    if not candidates:
+        return None
+    best = None
+    best_vol = None
+    for dim, cut in candidates:
+        lo_mask = pts[:, dim] <= cut
+        lo_box = bounding_box(pts[lo_mask])
+        hi_box = bounding_box(pts[~lo_mask])
+        vol = ((lo_box.volume() if lo_box is not None else 0) +
+               (hi_box.volume() if hi_box is not None else 0))
+        if best_vol is None or vol < best_vol:
+            best_vol = vol
+            best = (lo_mask, ~lo_mask, lo_box, hi_box)
+    lo_mask, hi_mask, lo_box, hi_box = best
+    return (np.nonzero(lo_mask)[0], np.nonzero(hi_mask)[0], lo_box, hi_box)
+
+
+def test_vectorized_best_split_matches_reference():
+    rng = np.random.default_rng(0)
+    for trial in range(40):
+        n = int(rng.integers(2, 300))
+        coords = rng.integers(0, 90, size=(n, 2))
+        t = make_tree(coords, min_cells=5)
+        chunk = t.leaves()[0]
+        lo = rng.integers(0, 80, size=2)
+        hi = lo + rng.integers(1, 30, size=2)
+        q = Box(tuple(int(x) for x in lo), tuple(int(x) for x in hi))
+        pts = t.coords[chunk.cell_idx]
+        want = _best_split_reference(chunk, pts, q)
+        st = RefineStats()
+        got = t._best_split(chunk, pts, q, st)
+        if want is None:
+            assert got is None
+            continue
+        assert (got[0] == want[0]).all() and (got[1] == want[1]).all()
+        assert got[2] == want[2] and got[3] == want[3]
+        assert st.split_candidates > 0
+        assert st.split_eval_s >= 0.0
+
+
+def test_refine_stats_split_timings_accumulate():
+    rng = np.random.default_rng(5)
+    coords = rng.integers(0, 100, size=(400, 2))
+    t = make_tree(coords, min_cells=10)
+    st = RefineStats()
+    t.refine(Box((10, 10), (60, 60)), st)
+    assert st.splits > 0
+    assert st.split_candidates >= st.splits
+    assert st.split_eval_s > 0.0
