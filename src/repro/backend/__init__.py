@@ -22,6 +22,8 @@ Both backends execute the *same* plans from the same coordinator, so
 planned byte accounting is identical by construction — the mesh backend
 adds measured quantities on top instead of replacing them.
 """
+from repro.backend.artifacts import (ChunkView, JoinArtifactCache,
+                                     task_coords)
 from repro.backend.base import (BACKENDS, DeviceBindingListener,
                                 ExecutedQuery, ExecutionBackend,
                                 workload_summary)
@@ -34,9 +36,11 @@ from repro.backend.simulated import SimulatedBackend
 from repro.backend.jax_mesh import JaxMeshBackend, make_backend
 
 __all__ = [
-    "BACKENDS", "CostModel", "DeviceBindingListener", "ExecutedQuery",
-    "ExecutionBackend", "JOIN_BACKENDS", "JaxMeshBackend", "JoinTask",
+    "BACKENDS", "ChunkView", "CostModel", "DeviceBindingListener",
+    "ExecutedQuery", "ExecutionBackend", "JOIN_BACKENDS",
+    "JaxMeshBackend", "JoinArtifactCache", "JoinTask",
     "NumpyJoinExecutor", "PRUNE_MODES", "PallasJoinExecutor",
     "PreparedBatch", "SimulatedBackend", "count_similar_pairs_np",
-    "make_backend", "make_join_executor", "workload_summary",
+    "make_backend", "make_join_executor", "task_coords",
+    "workload_summary",
 ]

@@ -57,6 +57,16 @@ class ExecutedQuery:
     # block pairs actually dispatched (equal under prune="dense").
     block_pairs_total: Optional[int] = None
     block_pairs_evaluated: Optional[int] = None
+    # Pallas host-prep amortization observables (None off the pallas
+    # path): prep_s is the host-side sort/prune/pad/stack wall-clock,
+    # dispatch_s the kernel-dispatch wall-clock, and the artifact
+    # counters are this query's hit/miss deltas against the
+    # JoinArtifactCache (repro.backend.artifacts) — a warm repeat query
+    # over resident chunks shows hits > 0 and a collapsed prep_s.
+    prep_s: Optional[float] = None
+    dispatch_s: Optional[float] = None
+    artifact_hits: Optional[int] = None
+    artifact_misses: Optional[int] = None
 
     @property
     def time_total_s(self) -> float:
@@ -84,9 +94,11 @@ class ExecutionBackend(Protocol):
 
 
 class DeviceBindingListener(Protocol):
-    """Cache life-cycle hooks a device-backed backend registers on
-    ``CacheState.listeners`` — buffer management in lockstep with
-    residency (mirror of the CoverageIndex sync points)."""
+    """Cache life-cycle hooks a residency-coupled component registers on
+    ``CacheState.listeners`` — device buffers (``JaxMeshBackend``) and
+    memoized join-prep artifacts (``JoinArtifactCache``) both move/free
+    in lockstep with residency through this surface (mirror of the
+    CoverageIndex sync points)."""
 
     def on_drop(self, chunk_id: int) -> None:
         """A chunk left the cache: free its committed buffer."""
@@ -140,4 +152,11 @@ def workload_summary(executed: Sequence[ExecutedQuery]) -> Dict[str, float]:
                                              for e in executed))
         out["block_pairs_evaluated"] = float(sum(e.block_pairs_evaluated or 0
                                                  for e in executed))
+    if any(e.prep_s is not None for e in executed):
+        out["prep_s"] = sum(e.prep_s or 0.0 for e in executed)
+        out["dispatch_s"] = sum(e.dispatch_s or 0.0 for e in executed)
+        out["artifact_hits"] = float(sum(e.artifact_hits or 0
+                                         for e in executed))
+        out["artifact_misses"] = float(sum(e.artifact_misses or 0
+                                           for e in executed))
     return out

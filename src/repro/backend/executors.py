@@ -8,28 +8,49 @@
     and shape-bucketed pair batches are dispatched to the
     ``kernels/simjoin`` Pallas kernel (interpret-mode by default, so it
     runs on CPU CI and compiles on TPU). Its ``prune`` knob selects the
-    dense grid (``"dense"``, every block pair evaluated — the parity
-    reference) or the block-sparse grid (``"block"``: coordinates are
-    spatially sorted, per-block bounding boxes pruned against ``eps``
-    on host, and only live block pairs are scalar-prefetched into the
-    kernel — see ``repro.kernels.simjoin.prune``).
+    grid per task:
 
-Every pallas dispatch records ``last_stats`` (``block_pairs_total`` =
-the dense grid size, ``block_pairs_evaluated`` = block pairs actually
-dispatched), which the backends surface per query on ``ExecutedQuery``.
+      - ``"dense"`` — every block pair evaluated (the parity reference);
+      - ``"block"`` — coordinates spatially sorted, per-block bounding
+        boxes pruned against ``eps`` on host, only live block pairs
+        scalar-prefetched into the kernel (``kernels.simjoin.prune``);
+      - ``"auto"`` (default) — per task, the block-sparse grid only when
+        it can win: a task goes dense when its padded pair list would be
+        at least as long as the dense grid (``padded_pair_len(P) >=
+        dense blocks``), which covers single-block chunk pairs (a dense
+        grid of 1 is below the minimum pad of 8) and near-dense pair
+        lists in one rule — the block kernel's cost is proportional to
+        the *padded* pair count, so this choice is never the slower one.
+
+Host-side prep (sort, boxes, padding, pair lists) is memoized in a
+:class:`repro.backend.artifacts.JoinArtifactCache` when tasks carry
+:class:`~repro.backend.artifacts.ChunkView` handles (attached by the
+backends, invalidated with cache residency); bare ndarray tasks prep
+uncached, preserving the seed behavior for direct callers.
+
+Every pallas dispatch records ``last_stats``: ``block_pairs_total`` (the
+dense grid size) and ``block_pairs_evaluated`` (block pairs actually
+dispatched), plus ``prep_s``/``dispatch_s`` wall-clock and the query's
+``artifact_hits``/``artifact_misses`` — the backends surface all of them
+per query on ``ExecutedQuery``.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-JOIN_BACKENDS = ("numpy", "pallas")
-PRUNE_MODES = ("dense", "block")
+from repro.backend.artifacts import ChunkView, JoinArtifactCache, task_coords
 
-# One unit of join work: (node, a coords, b coords, self-join?).
+JOIN_BACKENDS = ("numpy", "pallas")
+PRUNE_MODES = ("dense", "block", "auto")
+
+# One unit of join work: (node, a side, b side, self-join?). Each side is
+# a (n, d) coordinate array or a ChunkView wrapping one (see
+# repro.backend.artifacts.task_coords).
 JoinTask = Tuple[int, np.ndarray, np.ndarray, bool]
 
 
@@ -82,25 +103,14 @@ def bucket_by_shape(tasks: Sequence[JoinTask], block: int,
     to its node's device). Returns key -> task indices."""
     buckets: Dict[tuple, List[int]] = {}
     for i, (node, a, b, same) in enumerate(tasks):
-        if a.shape[0] == 0 or b.shape[0] == 0:
+        ca, cb = task_coords(a), task_coords(b)
+        if ca.shape[0] == 0 or cb.shape[0] == 0:
             continue
-        na = -(-a.shape[0] // block) * block
-        nb = -(-b.shape[0] // block) * block
+        na = -(-ca.shape[0] // block) * block
+        nb = -(-cb.shape[0] // block) * block
         key = (node, same, na, nb) if by_node else (same, na, nb)
         buckets.setdefault(key, []).append(i)
     return buckets
-
-
-def stack_bucket(tasks: Sequence[JoinTask], idxs: Sequence[int], ops,
-                 sentinel: int):
-    """Pad one bucket's coordinate sets to BLOCK (±sentinel fill, via
-    ``ops.pad_cm_np``) and stack them into the (k, d, N) batches the
-    batched simjoin kernel consumes."""
-    a_stack = np.stack([ops.pad_cm_np(tasks[i][1], sentinel)
-                        for i in idxs])
-    b_stack = np.stack([ops.pad_cm_np(tasks[i][2], -sentinel)
-                        for i in idxs])
-    return a_stack, b_stack
 
 
 class NumpyJoinExecutor:
@@ -113,8 +123,11 @@ class NumpyJoinExecutor:
         self.last_stats: Optional[Dict[str, int]] = None
 
     def count_pairs(self, tasks: Sequence[JoinTask], eps: int) -> List[int]:
-        """Per-task match counts via the (overridable) numpy predicate."""
-        return [self.join_fn(a, b, eps, same) for _, a, b, same in tasks]
+        """Per-task match counts via the (overridable) numpy predicate
+        (ChunkView task sides are unwrapped to the raw arrays the
+        predicate expects)."""
+        return [self.join_fn(task_coords(a), task_coords(b), eps, same)
+                for _, a, b, same in tasks]
 
 
 class PallasJoinExecutor:
@@ -128,12 +141,23 @@ class PallasJoinExecutor:
     mesh backend (``repro.backend.jax_mesh``) keys buckets by node and
     pins each bucket to that node's device.
 
-    ``prune="block"`` switches buckets to the block-sparse kernel: per
-    task the coordinates are spatially sorted, live block pairs computed
-    on host (min L1 box distance ``<= eps``), and the pair list —
-    padded to a power-of-two bucket length so pair-count jitter does not
-    retrace — scalar-prefetched into the kernel. ``prune="dense"`` (the
-    default) keeps the full grid for parity testing and as fallback.
+    ``prune`` selects the grid: ``"dense"`` (full grid — parity
+    reference and fallback), ``"block"`` (always block-sparse: per task
+    the coordinates are spatially sorted, live block pairs computed on
+    host, and the pair list — padded to a power-of-two bucket length so
+    pair-count jitter does not retrace — scalar-prefetched into the
+    kernel), or ``"auto"`` (default: per task, block-sparse only when
+    the padded pair list is shorter than the dense grid — single-block
+    chunk pairs and near-dense pair lists dispatch dense, so auto never
+    pays prefetch overhead the prune cannot recoup).
+
+    Host-side prep is memoized in :attr:`artifacts` (a
+    :class:`~repro.backend.artifacts.JoinArtifactCache`) for tasks whose
+    sides are :class:`~repro.backend.artifacts.ChunkView` handles — the
+    backends attach them so repeated queries over resident chunks skip
+    sort/box/pad/pair-list work entirely; ``last_stats`` records the
+    per-query ``prep_s``/``dispatch_s`` split and artifact hit/miss
+    deltas alongside the block-pair counters.
 
     The jitted batch callable for every ``(kernel, same, shapes, eps)``
     bucket key is memoized in ``_fn_cache``: repeated same-shape queries
@@ -141,7 +165,8 @@ class PallasJoinExecutor:
     without re-binding statics (``ops.TRACE_COUNTS`` proves no retrace).
     """
 
-    def __init__(self, interpret: bool = True, prune: str = "dense"):
+    def __init__(self, interpret: bool = True, prune: str = "auto",
+                 artifacts: Optional[JoinArtifactCache] = None):
         # Imported lazily so the numpy backend never pulls in jax.
         from repro.kernels.simjoin import ops, prune as prune_mod, simjoin
         if prune not in PRUNE_MODES:
@@ -153,20 +178,78 @@ class PallasJoinExecutor:
         self._sentinel = simjoin.SENTINEL
         self.interpret = interpret
         self.prune = prune
+        self.artifacts = (artifacts if artifacts is not None
+                          else JoinArtifactCache())
         self._fn_cache: Dict[tuple, Callable] = {}
         self.last_stats: Optional[Dict[str, int]] = None
+
+    # ------------------------------------------------ artifact-aware prep
+
+    def _sorted_side(self, x) -> np.ndarray:
+        """Spatially sorted coordinates of one task side (artifact-cached
+        for ChunkViews, computed in place for raw arrays)."""
+        if isinstance(x, ChunkView) and x.key is not None:
+            return self.artifacts.sorted_coords(
+                x, lambda: self._prune.spatial_sort(x.coords))
+        return self._prune.spatial_sort(task_coords(x))
+
+    def _padded_side(self, x, sentinel: int,
+                     sorted_arr: Optional[np.ndarray] = None) -> np.ndarray:
+        """Sentinel-padded coordinate-major form of one task side.
+        ChunkViews cache the padded *sorted* artifact (shared across
+        dense and block dispatch — the count is invariant under the
+        reordering); raw arrays pad ``sorted_arr`` when the caller
+        pre-sorted them (block path) and the original order otherwise
+        (dense path, the seed behavior)."""
+        if isinstance(x, ChunkView) and x.key is not None:
+            return self.artifacts.padded(
+                x, sentinel,
+                lambda: self._ops.pad_cm_np(self._sorted_side(x), sentinel))
+        base = sorted_arr if sorted_arr is not None else task_coords(x)
+        return self._ops.pad_cm_np(base, sentinel)
+
+    def _pair_list(self, xa, xb, a_s: np.ndarray, b_s: np.ndarray,
+                   eps: int, same: bool) -> Tuple[np.ndarray, int]:
+        """The task's ``(pairs, dense_total)`` block-pair list
+        (artifact-cached per chunk pair + eps when both sides are
+        cacheable views)."""
+        return self.artifacts.block_pairs(
+            xa, xb, self._block, int(eps), bool(same),
+            lambda: self._prune.build_block_pairs(
+                a_s, b_s, self._block, int(eps), bool(same)))
 
     # ------------------------------------------------- batch preparation
 
     def iter_batches(self, tasks: Sequence[JoinTask], eps: int,
                      by_node: bool = False
                      ) -> Tuple[List[PreparedBatch], Dict[str, int]]:
-        """Bucket and stack the tasks' kernel inputs (dense or pruned per
-        the ``prune`` knob); returns ``(batches, stats)`` where stats
-        carries the query's ``block_pairs_total`` / ``_evaluated``."""
-        if self.prune == "block":
-            return self._batches_block(tasks, eps, by_node)
-        return self._batches_dense(tasks, by_node)
+        """Bucket and stack the tasks' kernel inputs (dense, block, or
+        per-task auto-selected per the ``prune`` knob); returns
+        ``(batches, stats)`` where stats carries the query's
+        ``block_pairs_total`` / ``_evaluated``, the host-side ``prep_s``
+        wall-clock, and the artifact-cache hit/miss deltas."""
+        t0 = time.perf_counter()
+        h0, m0 = self.artifacts.hits, self.artifacts.misses
+        if self.prune == "dense":
+            batches, stats = self._batches_dense(tasks, by_node)
+        else:
+            batches, stats = self._batches_block(
+                tasks, eps, by_node, auto=self.prune == "auto")
+        stats["prep_s"] = time.perf_counter() - t0
+        stats["artifact_hits"] = self.artifacts.hits - h0
+        stats["artifact_misses"] = self.artifacts.misses - m0
+        return batches, stats
+
+    def _stack_dense(self, tasks: Sequence[JoinTask], idxs: Sequence[int]
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """Pad one dense bucket's coordinate sets to BLOCK (±sentinel
+        fill) and stack them into the (k, d, N) batches the batched
+        kernel consumes."""
+        a_stack = np.stack([self._padded_side(tasks[i][1], self._sentinel)
+                            for i in idxs])
+        b_stack = np.stack([self._padded_side(tasks[i][2], -self._sentinel)
+                            for i in idxs])
+        return a_stack, b_stack
 
     def _batches_dense(self, tasks: Sequence[JoinTask], by_node: bool
                        ) -> Tuple[List[PreparedBatch], Dict[str, int]]:
@@ -177,8 +260,7 @@ class PallasJoinExecutor:
                                          by_node=by_node).items():
             node = key[0] if by_node else None
             same, na, nb = key[-3:]
-            a_stack, b_stack = stack_bucket(tasks, idxs, self._ops,
-                                            self._sentinel)
+            a_stack, b_stack = self._stack_dense(tasks, idxs)
             total += (na // self._block) * (nb // self._block) * len(idxs)
             batches.append(PreparedBatch(
                 node=node, same=same, idxs=list(idxs),
@@ -188,40 +270,56 @@ class PallasJoinExecutor:
                          "block_pairs_evaluated": total}
 
     def _batches_block(self, tasks: Sequence[JoinTask], eps: int,
-                       by_node: bool
+                       by_node: bool, auto: bool = False
                        ) -> Tuple[List[PreparedBatch], Dict[str, int]]:
         """Block-sparse grid: sort, prune, and pad each task's pair
         list; tasks with no surviving block pair skip dispatch (their
-        count is provably zero)."""
+        count is provably zero). With ``auto``, a task whose padded pair
+        list cannot beat its dense grid is routed to a dense bucket
+        instead — single-block chunk pairs skip pair-list construction
+        entirely (a dense grid of one block is already minimal)."""
         total = evaluated = 0
         prepped: Dict[int, tuple] = {}
-        buckets: Dict[tuple, List[int]] = {}
+        block_buckets: Dict[tuple, List[int]] = {}
+        dense_buckets: Dict[tuple, List[int]] = {}
         for i, (node, a, b, same) in enumerate(tasks):
-            if a.shape[0] == 0 or b.shape[0] == 0:
+            ca, cb = task_coords(a), task_coords(b)
+            if ca.shape[0] == 0 or cb.shape[0] == 0:
                 continue
-            a_s = self._prune.spatial_sort(a)
-            b_s = a_s if same else self._prune.spatial_sort(b)
-            pairs, dense_total = self._prune.build_block_pairs(
-                a_s, b_s, self._block, int(eps), bool(same))
+            na = -(-ca.shape[0] // self._block) * self._block
+            nb = -(-cb.shape[0] // self._block) * self._block
+            grid = (na // self._block) * (nb // self._block)
+            dkey = ((node,) if by_node else ()) + (same, na, nb)
+            if auto and grid == 1:
+                total += 1
+                evaluated += 1
+                dense_buckets.setdefault(dkey, []).append(i)
+                continue
+            a_s = self._sorted_side(a)
+            b_s = a_s if same else self._sorted_side(b)
+            pairs, dense_total = self._pair_list(a, b, a_s, b_s, eps, same)
             total += dense_total
             if pairs.shape[0] == 0:
                 continue
+            if (auto and self._prune.padded_pair_len(pairs.shape[0])
+                    >= dense_total):
+                evaluated += dense_total
+                dense_buckets.setdefault(dkey, []).append(i)
+                continue
             evaluated += pairs.shape[0]
-            na = -(-a.shape[0] // self._block) * self._block
-            nb = -(-b.shape[0] // self._block) * self._block
             plen = self._prune.padded_pair_len(pairs.shape[0])
-            key = ((node,) if by_node else ()) + (same, na, nb, plen)
             prepped[i] = (a_s, b_s, pairs)
-            buckets.setdefault(key, []).append(i)
+            block_buckets.setdefault(dkey + (plen,), []).append(i)
         batches: List[PreparedBatch] = []
-        for key, idxs in buckets.items():
+        for key, idxs in block_buckets.items():
             node = key[0] if by_node else None
             same, na, nb, plen = key[-4:]
-            a_stack = np.stack([self._ops.pad_cm_np(prepped[i][0],
-                                                    self._sentinel)
+            a_stack = np.stack([self._padded_side(tasks[i][1], self._sentinel,
+                                                  sorted_arr=prepped[i][0])
                                 for i in idxs])
-            b_stack = np.stack([self._ops.pad_cm_np(prepped[i][1],
-                                                    -self._sentinel)
+            b_stack = np.stack([self._padded_side(tasks[i][2],
+                                                  -self._sentinel,
+                                                  sorted_arr=prepped[i][1])
                                 for i in idxs])
             p_stack = np.stack([self._prune.pad_pairs(prepped[i][2], plen)
                                 for i in idxs])
@@ -229,6 +327,14 @@ class PallasJoinExecutor:
                 node=node, same=same, idxs=list(idxs),
                 arrays=(a_stack, b_stack, p_stack),
                 fn_key=("block", same, na, nb, plen)))
+        for key, idxs in dense_buckets.items():
+            node = key[0] if by_node else None
+            same, na, nb = key[-3:]
+            a_stack, b_stack = self._stack_dense(tasks, idxs)
+            batches.append(PreparedBatch(
+                node=node, same=same, idxs=list(idxs),
+                arrays=(a_stack, b_stack),
+                fn_key=("dense", same, na, nb)))
         return batches, {"block_pairs_total": total,
                          "block_pairs_evaluated": evaluated}
 
@@ -253,32 +359,39 @@ class PallasJoinExecutor:
 
     def count_pairs(self, tasks: Sequence[JoinTask], eps: int) -> List[int]:
         """Per-task match counts via bucketed batched kernel dispatch;
-        records the query's block-pair counters in ``last_stats``."""
+        records the query's block-pair counters, prep/dispatch split,
+        and artifact hit/miss deltas in ``last_stats``."""
         counts = [0] * len(tasks)
         batches, stats = self.iter_batches(tasks, eps)
+        t0 = time.perf_counter()
         for batch in batches:
             got = np.asarray(self.dispatch(batch, eps))
             for i, c in zip(batch.idxs, got):
                 counts[i] = int(c)
+        stats["dispatch_s"] = time.perf_counter() - t0
         self.last_stats = stats
         return counts
 
 
 def make_join_executor(backend: str, join_fn: Callable[..., int],
-                       interpret: bool = True, prune: str = "dense"):
+                       interpret: bool = True, prune: str = "auto",
+                       artifacts: Optional[JoinArtifactCache] = None):
     """Build a join executor for ``backend``, degrading pallas -> numpy
     with a warning when jax is unavailable. ``prune`` selects the pallas
-    grid (``"dense"`` full grid / ``"block"`` block-sparse) and is
-    rejected for the numpy executor, which has no block structure."""
+    grid (``"dense"`` full grid / ``"block"`` block-sparse / ``"auto"``
+    per-task selection, the default); the numpy executor has no block
+    structure, so it accepts the adaptive default as a no-op but rejects
+    an explicit ``"block"`` request it cannot honor."""
     if backend == "numpy":
-        if prune != "dense":
+        if prune == "block":
             raise ValueError(
                 f"prune={prune!r} requires the pallas join backend; the "
                 f"numpy executor has no block grid to prune")
         return NumpyJoinExecutor(join_fn)
     if backend == "pallas":
         try:
-            return PallasJoinExecutor(interpret=interpret, prune=prune)
+            return PallasJoinExecutor(interpret=interpret, prune=prune,
+                                      artifacts=artifacts)
         except ImportError as e:                 # jax not available: degrade
             import warnings
             warnings.warn(f"join_backend='pallas' unavailable ({e}); "

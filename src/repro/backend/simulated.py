@@ -21,6 +21,7 @@ import numpy as np
 if TYPE_CHECKING:
     from repro.core.coordinator import (CacheCoordinator, QueryReport,
                                         SimilarityJoinQuery)
+from repro.backend.artifacts import ChunkView, JoinArtifactCache
 from repro.backend.base import ExecutedQuery
 from repro.backend.cost_model import CostModel
 from repro.backend.executors import (JoinTask, count_similar_pairs_np,
@@ -35,20 +36,30 @@ class SimulatedBackend:
     def __init__(self, n_nodes: int, cost_model: Optional[CostModel] = None,
                  join_fn: Optional[Callable[..., int]] = None,
                  join_backend: str = "numpy", execute_joins: bool = True,
-                 interpret: bool = True, prune: str = "dense"):
+                 interpret: bool = True, prune: str = "auto"):
         self.n_nodes = n_nodes
         self.cost = cost_model or CostModel()
         self.join_fn = join_fn or count_similar_pairs_np
         self.execute_joins = execute_joins
         self.executor = make_join_executor(join_backend, self.join_fn,
                                            interpret=interpret, prune=prune)
+        # The pallas executor owns a JoinArtifactCache; the backend wires
+        # its invalidation into CacheState at bind time (the numpy
+        # executor has no host prep to memoize — artifacts stays None).
+        self.artifacts: Optional[JoinArtifactCache] = getattr(
+            self.executor, "artifacts", None)
         self.coordinator: Optional["CacheCoordinator"] = None
 
     # ------------------------------------------------------------- binding
 
     def bind(self, coordinator: "CacheCoordinator") -> None:
-        """Attach to the coordinator whose plans this backend executes."""
+        """Attach to the coordinator whose plans this backend executes,
+        registering the join-artifact cache as a residency listener so
+        memoized prep artifacts are invalidated in lockstep with
+        eviction and split-remap (they never outlive their chunk)."""
         self.coordinator = coordinator
+        if self.artifacts is not None:
+            coordinator.cache.add_listener(self.artifacts)
 
     def _queried_coords(self, chunk_id: int, file_id: int,
                         box) -> np.ndarray:
@@ -92,6 +103,12 @@ class SimulatedBackend:
         """Materialize the plan's chunk-pair work: (tasks, per-node
         cell-pair load, per-chunk queried coordinates).
 
+        With a pallas executor each task side is a
+        :class:`~repro.backend.artifacts.ChunkView` keyed by chunk
+        identity and queried subset, so the executor's artifact cache
+        can memoize host-side prep across queries (numpy tasks stay raw
+        arrays — the seed shape).
+
         A pair with an empty sliced side contributes no matches; under
         the semantic-reuse knob such pairs are skipped before dispatch
         (gated so a custom ``join_fn`` still sees every pair under the
@@ -102,6 +119,7 @@ class SimulatedBackend:
         tasks: List[JoinTask] = []
         work_by_node: Dict[int, int] = {}
         coords_cache: Dict[int, np.ndarray] = {}
+        views: Dict[int, ChunkView] = {}
         if report.join_plan is None:
             return tasks, work_by_node, coords_cache
         skip_empty = self.coordinator.reuse == "on"
@@ -115,7 +133,14 @@ class SimulatedBackend:
                                   + ca.shape[0] * cb.shape[0])
             if skip_empty and (ca.shape[0] == 0 or cb.shape[0] == 0):
                 continue
-            tasks.append((node, ca, cb, a == b))
+            if self.artifacts is not None:
+                for cid in (a, b):
+                    if cid not in views:
+                        views[cid] = self.artifacts.view(
+                            cid, cm[cid].box, query.box, coords_cache[cid])
+                tasks.append((node, views[a], views[b], a == b))
+            else:
+                tasks.append((node, ca, cb, a == b))
         return tasks, work_by_node, coords_cache
 
     # ----------------------------------------------------------- execution
@@ -127,23 +152,25 @@ class SimulatedBackend:
         time_net = self.modeled_net_time(report)
 
         matches: Optional[int] = None
-        bp_total: Optional[int] = None
-        bp_eval: Optional[int] = None
+        stats = None
         tasks, work_by_node, _ = self.gather_join_tasks(query, report)
         if report.join_plan is not None and self.execute_joins:
             matches = sum(self.executor.count_pairs(tasks, query.eps))
             stats = getattr(self.executor, "last_stats", None)
-            if stats is not None:
-                bp_total = stats["block_pairs_total"]
-                bp_eval = stats["block_pairs_evaluated"]
         time_compute = (max(work_by_node.values(), default=0)
                         / self.cost.cell_pairs_per_sec)
 
         t_opt = report.opt_time_chunking_s + report.opt_time_evict_place_s
+        stats = stats or {}
         return ExecutedQuery(report=report, time_scan_s=time_scan,
                              time_net_s=time_net,
                              time_compute_s=time_compute,
                              time_opt_s=t_opt, matches=matches,
                              backend=self.name,
-                             block_pairs_total=bp_total,
-                             block_pairs_evaluated=bp_eval)
+                             block_pairs_total=stats.get("block_pairs_total"),
+                             block_pairs_evaluated=stats.get(
+                                 "block_pairs_evaluated"),
+                             prep_s=stats.get("prep_s"),
+                             dispatch_s=stats.get("dispatch_s"),
+                             artifact_hits=stats.get("artifact_hits"),
+                             artifact_misses=stats.get("artifact_misses"))

@@ -46,12 +46,15 @@ class CacheState:
         self.cached: Set[int] = set()            # resident chunk ids
         self.locations: Dict[int, int] = {}      # cached chunk -> node
         self.coverage = CoverageIndex()          # boxes of resident chunks
-        # Device-binding listeners (repro.backend.base.
-        # DeviceBindingListener): execution backends that commit cached
-        # chunks as device buffers register here so buffers move/free in
-        # lockstep with residency. Point-wise events fire from ``drop``
-        # and ``remap_split``; ``sync_devices`` reconciles after policy
-        # rounds that reassign the resident set wholesale.
+        # Residency listeners (repro.backend.base.DeviceBindingListener):
+        # components whose state is derived from resident chunks register
+        # here so it moves/frees in lockstep with residency — execution
+        # backends committing device buffers (JaxMeshBackend) and the
+        # join-artifact cache memoizing host-side prep
+        # (repro.backend.artifacts.JoinArtifactCache). Point-wise events
+        # fire from ``drop`` and ``remap_split``; ``sync_devices``
+        # reconciles after policy rounds that reassign the resident set
+        # wholesale.
         self.listeners: List = []
 
     # ------------------------------------------------------------- budgets

@@ -27,12 +27,18 @@ Join execution backends for the simulated path (``join_backend``):
   * ``"pallas"`` — the batched executor: BLOCK-padded, shape-bucketed
     pair batches dispatched to the ``kernels/simjoin`` Pallas kernel
     (interpret-mode by default, so it runs on CPU CI and compiles on
-    TPU). Its ``prune`` knob selects the dense grid (``"dense"``,
-    default — every block pair evaluated) or the block-sparse grid
-    (``"block"`` — spatially sorted coordinates, host-pruned block
-    pairs scalar-prefetched into the kernel; identical match counts,
-    a fraction of the block-pair work, reported per query as
-    ``ExecutedQuery.block_pairs_evaluated / block_pairs_total``).
+    TPU). Its ``prune`` knob selects the grid per task: ``"dense"``
+    (every block pair evaluated), ``"block"`` (spatially sorted
+    coordinates, host-pruned block pairs scalar-prefetched into the
+    kernel), or ``"auto"`` (default — block-sparse only where the
+    padded pair list is shorter than the dense grid, so single-block
+    and near-dense chunk pairs skip prune overhead). Match counts are
+    identical across all three; the work done is reported per query as
+    ``ExecutedQuery.block_pairs_evaluated / block_pairs_total``.
+    Host-side prep (sort/boxes/padding/pair lists) is memoized per
+    resident chunk in a ``JoinArtifactCache`` invalidated with cache
+    residency; the per-query ``prep_s``/``dispatch_s`` split and
+    ``artifact_hits``/``artifact_misses`` land on ``ExecutedQuery``.
 
 This module re-exports the cost model, executors, ``ExecutedQuery``, and
 ``workload_summary`` from ``repro.backend`` so seed-era imports keep
@@ -72,7 +78,7 @@ class RawArrayCluster:
                  backend: str = "simulated",
                  devices: Optional[Sequence[Any]] = None,
                  compiled: Optional[bool] = None,
-                 prune: str = "dense"):
+                 prune: str = "auto"):
         if join_fn is not None and join_backend != "numpy":
             raise ValueError(
                 "join_fn overrides the join predicate of the numpy "

@@ -4,7 +4,8 @@ Pure-numpy preprocessing that turns a coordinate set into the inputs the
 ``simjoin_pruned_block_counts`` kernel consumes:
 
   1. ``spatial_sort`` orders cells along the longest dimension of their
-     bounding box so consecutive 128-wide kernel blocks are spatially
+     bounding box (lexicographic tie-break over the remaining
+     dimensions) so consecutive 128-wide kernel blocks are spatially
      coherent (tight per-block boxes);
   2. ``block_bounds`` computes those per-block bounding boxes (real
      cells only — sentinel padding never enters a box);
@@ -29,14 +30,20 @@ import numpy as np
 
 def spatial_sort(coords: np.ndarray) -> np.ndarray:
     """Order (n, d) integer cell coordinates along the longest dimension
-    of their bounding box (stable), so consecutive kernel blocks cover
-    spatially compact slabs. A 0/1-cell set is returned unchanged."""
+    of their bounding box, breaking ties lexicographically over the
+    remaining dimensions (in ascending dimension order; stable), so
+    equal-key runs stay spatially compact and per-block boxes come out
+    tighter. A 0/1-cell set is returned unchanged; the pair count is
+    invariant under any reordering (see the module docstring)."""
     if coords.shape[0] <= 1:
         return coords
     spans = coords.max(axis=0) - coords.min(axis=0)
     dim = int(np.argmax(spans))
-    order = np.argsort(coords[:, dim], kind="stable")
-    return coords[order]
+    rest = [k for k in range(coords.shape[1]) if k != dim]
+    # np.lexsort sorts by its LAST key first: primary = the longest
+    # dimension, then the remaining dimensions most-significant first.
+    keys = tuple(coords[:, k] for k in reversed(rest)) + (coords[:, dim],)
+    return coords[np.lexsort(keys)]
 
 
 def block_bounds(coords: np.ndarray, block: int
@@ -99,10 +106,16 @@ def padded_pair_len(n_pairs: int) -> int:
 
 def pad_pairs(pairs: np.ndarray, to_len: int) -> np.ndarray:
     """Pad a (P, 3) pair list to ``to_len`` rows with invalid
-    ``(0, 0, 0)`` entries — the kernel multiplies their counts away."""
+    ``(0, 0, 0)`` entries — the kernel multiplies their counts away.
+    An oversize pair list raises ``ValueError`` (a real error, not an
+    ``assert``: silent truncation here would drop matches, and asserts
+    vanish under ``python -O``)."""
     if pairs.shape[0] == to_len:
         return pairs
-    assert pairs.shape[0] < to_len, (pairs.shape, to_len)
+    if pairs.shape[0] > to_len:
+        raise ValueError(
+            f"pair list of shape {pairs.shape} does not fit the padded "
+            f"length {to_len}; pad_pairs only grows pair lists")
     out = np.zeros((to_len, 3), np.int32)
     out[:pairs.shape[0]] = pairs
     return out

@@ -151,11 +151,14 @@ def test_min_l1_box_dist_lower_bounds_cell_distance(pts_a, pts_b, block):
     """Soundness of the block prune: the minimal L1 distance between two
     blocks' bounding boxes never exceeds the L1 distance of ANY cell
     pair drawn from the two blocks — so dropping block pairs with box
-    distance > eps cannot drop a matching cell pair. (Pure numpy: the
-    prune module never imports jax.)"""
-    from repro.kernels.simjoin.prune import block_bounds, min_l1_box_dist
-    a = np.asarray(pts_a, dtype=np.int64)
-    b = np.asarray(pts_b, dtype=np.int64)
+    distance > eps cannot drop a matching cell pair. Blocks are taken
+    over the *spatially sorted* order (longest-dimension key with
+    lexicographic tie-break), exactly as the executor builds them.
+    (Pure numpy: the prune module never imports jax.)"""
+    from repro.kernels.simjoin.prune import (block_bounds, min_l1_box_dist,
+                                             spatial_sort)
+    a = spatial_sort(np.asarray(pts_a, dtype=np.int64))
+    b = spatial_sort(np.asarray(pts_b, dtype=np.int64))
     lo_a, hi_a = block_bounds(a, block)
     lo_b, hi_b = block_bounds(b, block)
     dmat = min_l1_box_dist(lo_a, hi_a, lo_b, hi_b)
@@ -163,6 +166,24 @@ def test_min_l1_box_dist_lower_bounds_cell_distance(pts_a, pts_b, block):
         for j in range(b.shape[0]):
             cell_dist = int(np.abs(a[i] - b[j]).sum())
             assert dmat[i // block, j // block] <= cell_dist
+
+
+@given(st.lists(st.tuples(st.integers(0, 50), st.integers(0, 6),
+                          st.integers(0, 6)), min_size=2, max_size=80))
+@settings(max_examples=50, deadline=None)
+def test_spatial_sort_permutation_and_tiebreak(pts):
+    """``spatial_sort`` is a permutation whose order is the primary
+    (longest-span) dimension with a full lexicographic tie-break over
+    the remaining dimensions — equal-key runs can never interleave."""
+    from repro.kernels.simjoin.prune import spatial_sort
+    a = np.asarray(pts, dtype=np.int64)
+    s = spatial_sort(a)
+    assert sorted(map(tuple, s)) == sorted(map(tuple, a))
+    spans = a.max(axis=0) - a.min(axis=0)
+    dim = int(np.argmax(spans))
+    rest = [k for k in range(a.shape[1]) if k != dim]
+    keys = [tuple(int(r[k]) for k in [dim] + rest) for r in s]
+    assert keys == sorted(keys)
 
 
 @given(st.integers(0, 2**31 - 1), st.integers(1, 300), st.integers(0, 6))

@@ -111,6 +111,32 @@ def test_prune_helpers():
     assert padded.shape == (8, 3) and (padded[3:] == 0).all()
 
 
+def test_pad_pairs_oversize_raises_value_error():
+    """An oversize pair list is a ValueError with the shapes in the
+    message — not a bare assert, which vanishes under ``python -O`` and
+    would let silent truncation drop matches."""
+    with pytest.raises(ValueError, match=r"\(9, 3\).*8"):
+        prune.pad_pairs(np.ones((9, 3), np.int32), 8)
+
+
+def test_spatial_sort_lexicographic_tiebreak():
+    """Equal primary-key runs are ordered lexicographically over the
+    remaining dimensions, so duplicate-key cells land in adjacent
+    (tighter) blocks; the output stays a permutation of the input."""
+    rng = np.random.default_rng(8)
+    # dim 0 has the largest span but only 3 distinct values: long
+    # equal-key runs exercise the tie-break.
+    a = np.stack([rng.choice([0, 5_000, 10_000], 500),
+                  rng.integers(0, 40, 500),
+                  rng.integers(0, 40, 500)], axis=1).astype(np.int32)
+    s = prune.spatial_sort(a)
+    assert sorted(map(tuple, s)) == sorted(map(tuple, a))
+    # Full ordering: primary key, then the remaining dims in ascending
+    # dimension order.
+    keyed = [(int(r[0]), int(r[1]), int(r[2])) for r in s]
+    assert keyed == sorted(keyed)
+
+
 # ----------------------------------------------------- executor parity
 
 def make_tasks(rng, k=8):
