@@ -1,23 +1,40 @@
 """Figure 6: improvement over file_lru across a 100-query PTF stress
 workload with a generous cache budget (favoring LRU, as in the paper) —
-plus the execution-backend comparison: the same workload run under the
-simulated cost model and under the jax device-mesh backend, reporting
-REAL (measured, not modeled) transfer and join wall-clock per backend.
+plus two executed-join sections:
 
-Run the backend section with virtual devices to exercise real
+  * the execution-backend comparison (``run_backends``): the same
+    workload run under the simulated cost model and under the jax
+    device-mesh backend, across the dense / block-sparse / auto join
+    grids, reporting REAL (measured, not modeled) transfer and join
+    wall-clock per backend;
+  * the cross-query sharing scenario (``run_mqo``): a Zipf-skewed
+    repeat workload run MQO-on/off x result-cache-on/off on both
+    backends, recording the task-dedup and result-serving counters.
+
+Both sections emit structured row dicts and merge them into
+``BENCH_caching.json`` (under the ``backends`` / ``mqo`` keys,
+preserving whatever ``bench_caching`` wrote) so successive PRs can diff
+the perf trajectory.
+
+Run the backend sections with virtual devices to exercise real
 cross-device transfers on a CPU-only host:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-        python -m benchmarks.bench_scalability
+        python -m benchmarks.bench_scalability --n-queries 30 --seed 33
 """
 from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 from benchmarks.common import (N_NODES, build_ptf, cell_anchors,
                                dataset_bytes, make_cluster, timed)
 from repro.core.cluster import RawArrayCluster, workload_summary
-from repro.core.workload import ptf_stress_workload
+from repro.core.workload import ptf_stress_workload, zipf_workload
 
 
 def run(n_queries: int = 100, print_rows: bool = True):
@@ -44,58 +61,184 @@ def run(n_queries: int = 100, print_rows: bool = True):
     return times
 
 
-def run_backends(n_queries: int = 30, print_rows: bool = True):
+def run_backends(n_queries: int = 30, print_rows: bool = True,
+                 seed: int = 33) -> List[Dict]:
     """Backend comparison: identical plans executed by the simulated and
-    jax_mesh backends, each under the dense and block-sparse join grids.
-    Rows report the modeled net/compute times, the block-pair pruning
-    counters (``block_pairs_evaluated/total``), and for the mesh backend
-    the MEASURED transfer + join kernel wall-clock and measured shipped
-    device bytes."""
+    jax_mesh backends, each under the dense, block-sparse, and
+    adaptive-auto join grids. Returns one structured row dict per
+    configuration carrying the modeled net/compute times, the block-pair
+    pruning counters (``block_pairs_evaluated/total``), and for the mesh
+    backend the MEASURED transfer + join kernel wall-clock and measured
+    shipped device bytes; rows also print in the scaffold CSV shape."""
     from repro.backend import JaxMeshBackend
-    catalog, reader = build_ptf("hdf5", n_files=12, cells=1500, seed=33)
+    catalog, reader = build_ptf("hdf5", n_files=12, cells=1500, seed=seed)
     queries = ptf_stress_workload(catalog.domain, n_queries=n_queries,
                                   eps=300,
                                   anchors=cell_anchors(catalog, reader))
     budget = dataset_bytes(catalog) // 8
-    out = {}
+    rows: List[Dict] = []
     matches = {}
-    for backend, prune in (("simulated", "dense"), ("simulated", "block"),
-                           ("jax_mesh", "dense"), ("jax_mesh", "block")):
-        label = f"{backend}_{prune}"
-        cluster = RawArrayCluster(
-            catalog, reader, N_NODES, budget // N_NODES, policy="cost",
-            min_cells=48, execute_joins=True, backend=backend,
-            join_backend="pallas", prune=prune)
-        executed, us = timed(cluster.run_workload, queries)
-        summ = workload_summary(executed)
-        out[label] = summ
-        matches[label] = sum(e.matches or 0 for e in executed)
-        if print_rows:
-            print(f"backend/{label}/modeled_net_s,{us:.0f},"
-                  f"{summ['net_time_s']:.4f}")
-            print(f"backend/{label}/modeled_compute_s,0,"
-                  f"{summ['compute_time_s']:.4f}")
-            print(f"backend/{label}/block_pairs,0,"
-                  f"{summ.get('block_pairs_evaluated', 0):.0f}/"
-                  f"{summ.get('block_pairs_total', 0):.0f}")
-        # make_backend degrades jax_mesh -> simulated when jax is absent;
-        # only emit measured rows when the mesh backend actually ran.
-        if isinstance(cluster.backend, JaxMeshBackend) and print_rows:
-            print(f"backend/{label}/measured_net_s,0,"
-                  f"{summ['measured_net_s']:.4f}")
-            print(f"backend/{label}/measured_compute_s,0,"
-                  f"{summ['measured_compute_s']:.4f}")
-            print(f"backend/{label}/measured_ship_bytes,0,"
-                  f"{summ['measured_ship_bytes']:.0f}")
-            stats = cluster.backend.device_stats
-            print(f"backend/{label}/committed_bytes_moved,0,"
-                  f"{stats['committed_bytes_moved']:.0f}")
+    for backend in ("simulated", "jax_mesh"):
+        for prune in ("dense", "block", "auto"):
+            label = f"{backend}_{prune}"
+            cluster = RawArrayCluster(
+                catalog, reader, N_NODES, budget // N_NODES, policy="cost",
+                min_cells=48, execute_joins=True, backend=backend,
+                join_backend="pallas", prune=prune)
+            executed, us = timed(cluster.run_workload, queries)
+            summ = workload_summary(executed)
+            mesh_ran = isinstance(cluster.backend, JaxMeshBackend)
+            matches[label] = sum(e.matches or 0 for e in executed)
+            row = {
+                "backend": backend, "prune": prune, "seed": seed,
+                "n_queries": n_queries, "bench_us": us,
+                "modeled_net_s": summ["net_time_s"],
+                "modeled_compute_s": summ["compute_time_s"],
+                "block_pairs_total": summ.get("block_pairs_total", 0.0),
+                "block_pairs_evaluated": summ.get("block_pairs_evaluated",
+                                                  0.0),
+                "matches": matches[label],
+            }
+            # make_backend degrades jax_mesh -> simulated when jax is
+            # absent; only emit measured rows when the mesh actually ran.
+            if mesh_ran:
+                row.update({
+                    "measured_net_s": summ["measured_net_s"],
+                    "measured_compute_s": summ["measured_compute_s"],
+                    "measured_ship_bytes": summ["measured_ship_bytes"],
+                    "committed_bytes_moved":
+                        cluster.backend.device_stats["committed_bytes_moved"],
+                })
+            rows.append(row)
+            if print_rows:
+                print(f"backend/{label}/modeled_net_s,{us:.0f},"
+                      f"{summ['net_time_s']:.4f}")
+                print(f"backend/{label}/modeled_compute_s,0,"
+                      f"{summ['compute_time_s']:.4f}")
+                print(f"backend/{label}/block_pairs,0,"
+                      f"{summ.get('block_pairs_evaluated', 0):.0f}/"
+                      f"{summ.get('block_pairs_total', 0):.0f}")
+                if mesh_ran:
+                    print(f"backend/{label}/measured_net_s,0,"
+                          f"{summ['measured_net_s']:.4f}")
+                    print(f"backend/{label}/measured_compute_s,0,"
+                          f"{summ['measured_compute_s']:.4f}")
+                    print(f"backend/{label}/measured_ship_bytes,0,"
+                          f"{summ['measured_ship_bytes']:.0f}")
+                    stats = cluster.backend.device_stats
+                    print(f"backend/{label}/committed_bytes_moved,0,"
+                          f"{stats['committed_bytes_moved']:.0f}")
     if print_rows:
         parity = len(set(matches.values())) == 1
         print(f"backend/match_parity,0,{int(parity)}")
-    return out
+    return rows
+
+
+def run_mqo(n_queries: int = 60, n_templates: int = 12,
+            batch_size: int = 8, print_rows: bool = True,
+            seed: int = 41) -> List[Dict]:
+    """Cross-query sharing scenario: a seeded Zipf(s=1.1) repeat workload
+    executed MQO-on/off x result-cache-on/off on both backends. Each row
+    records the dedup counters (``mqo_tasks_total/executed/shared_hits``),
+    the result-tier counters (hits/misses + ``planner_invocations``), and
+    the match total — identical across every configuration by
+    construction (the parity row asserts it)."""
+    from repro.backend import JaxMeshBackend  # noqa: F401 (mesh probe)
+    catalog, reader = build_ptf("hdf5", n_files=12, cells=1500, seed=35)
+    queries = zipf_workload(catalog.domain, n_queries=n_queries,
+                            n_templates=n_templates, s=1.1, eps=300,
+                            seed=seed,
+                            anchors=cell_anchors(catalog, reader))
+    budget = dataset_bytes(catalog) // 8
+    rows: List[Dict] = []
+    matches = {}
+    for backend in ("simulated", "jax_mesh"):
+        for mqo in ("off", "on"):
+            for rc in ("off", "on"):
+                label = f"{backend}_mqo_{mqo}_rc_{rc}"
+                cluster = RawArrayCluster(
+                    catalog, reader, N_NODES, budget // N_NODES,
+                    policy="cost", min_cells=48, execute_joins=True,
+                    backend=backend, join_backend="pallas", prune="auto",
+                    mqo=mqo, result_cache=rc)
+                executed, us = timed(cluster.run_workload, queries,
+                                     batch_size=batch_size)
+                summ = workload_summary(executed)
+                coord = cluster.coordinator
+                matches[label] = sum(e.matches or 0 for e in executed)
+                rows.append({
+                    "backend": backend, "mqo": mqo, "result_cache": rc,
+                    "seed": seed, "n_queries": n_queries,
+                    "n_templates": n_templates, "batch_size": batch_size,
+                    "bench_us": us, "matches": matches[label],
+                    "mqo_tasks_total": summ.get("mqo_tasks_total", 0.0),
+                    "mqo_tasks_executed": summ.get("mqo_tasks_executed",
+                                                   0.0),
+                    "mqo_shared_hits": summ.get("mqo_shared_hits", 0.0),
+                    "result_cache_hits":
+                        coord.stats["result_cache_hits"],
+                    "result_cache_misses":
+                        coord.stats["result_cache_misses"],
+                    "planner_invocations": coord.planner_invocations,
+                    "compute_time_s": summ["compute_time_s"],
+                    "measured_compute_s": summ.get("measured_compute_s",
+                                                   0.0),
+                })
+                if print_rows:
+                    print(f"mqo/{label}/tasks,{us:.0f},"
+                          f"{summ.get('mqo_tasks_executed', 0):.0f}/"
+                          f"{summ.get('mqo_tasks_total', 0):.0f}")
+                    print(f"mqo/{label}/result_cache_hits,0,"
+                          f"{coord.stats['result_cache_hits']}")
+                    print(f"mqo/{label}/planner_invocations,0,"
+                          f"{coord.planner_invocations}")
+    if print_rows:
+        parity = len(set(matches.values())) == 1
+        print(f"mqo/match_parity,0,{int(parity)}")
+    return rows
+
+
+def merge_json(path: str, backends_rows: Optional[List[Dict]] = None,
+               mqo_rows: Optional[List[Dict]] = None) -> None:
+    """Read-modify-write ``BENCH_caching.json``: replace only the
+    ``backends`` / ``mqo`` keys, preserving everything ``bench_caching``
+    (or a previous run) recorded."""
+    data: Dict = {}
+    if os.path.exists(path):
+        with open(path) as fh:
+            data = json.load(fh)
+    if backends_rows is not None:
+        data["backends"] = backends_rows
+    if mqo_rows is not None:
+        data["mqo"] = mqo_rows
+    with open(path, "w") as fh:
+        json.dump(data, fh, indent=2, sort_keys=True)
+    print(f"wrote {path}")
+
+
+def main(argv: Optional[Sequence[str]] = None) -> None:
+    """CLI: Fig. 6 + both executed-join sections, JSON-merged."""
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--n-queries", type=int, default=30,
+                    help="workload length of the backend/MQO sections "
+                         "(Fig. 6 keeps its 100-query stress workload)")
+    ap.add_argument("--seed", type=int, default=33,
+                    help="dataset/workload seed of the backend and MQO "
+                         "sections")
+    ap.add_argument("--skip-fig6", action="store_true",
+                    help="run only the executed-join sections")
+    ap.add_argument("--out", default="BENCH_caching.json",
+                    help="JSON path to merge backend/mqo rows into "
+                         "('' disables)")
+    args = ap.parse_args(argv)
+    if not args.skip_fig6:
+        run()
+    backends_rows = run_backends(n_queries=args.n_queries, seed=args.seed)
+    mqo_rows = run_mqo(n_queries=max(args.n_queries * 2, 20),
+                       seed=args.seed + 8)
+    if args.out:
+        merge_json(args.out, backends_rows, mqo_rows)
 
 
 if __name__ == "__main__":
-    run()
-    run_backends()
+    main()

@@ -23,7 +23,7 @@ planned byte accounting is identical by construction — the mesh backend
 adds measured quantities on top instead of replacing them.
 """
 from repro.backend.artifacts import (ChunkView, JoinArtifactCache,
-                                     task_coords)
+                                     subset_token, task_coords)
 from repro.backend.base import (BACKENDS, DeviceBindingListener,
                                 ExecutedQuery, ExecutionBackend,
                                 workload_summary)
@@ -32,15 +32,15 @@ from repro.backend.executors import (JOIN_BACKENDS, PRUNE_MODES, JoinTask,
                                      NumpyJoinExecutor, PallasJoinExecutor,
                                      PreparedBatch, count_similar_pairs_np,
                                      make_join_executor)
-from repro.backend.simulated import SimulatedBackend
+from repro.backend.simulated import MQO_MODES, SimulatedBackend
 from repro.backend.jax_mesh import JaxMeshBackend, make_backend
 
 __all__ = [
     "BACKENDS", "ChunkView", "CostModel", "DeviceBindingListener",
     "ExecutedQuery", "ExecutionBackend", "JOIN_BACKENDS",
-    "JaxMeshBackend", "JoinArtifactCache", "JoinTask",
+    "JaxMeshBackend", "JoinArtifactCache", "JoinTask", "MQO_MODES",
     "NumpyJoinExecutor", "PRUNE_MODES", "PallasJoinExecutor",
     "PreparedBatch", "SimulatedBackend", "count_similar_pairs_np",
-    "make_backend", "make_join_executor", "task_coords",
+    "make_backend", "make_join_executor", "subset_token", "task_coords",
     "workload_summary",
 ]

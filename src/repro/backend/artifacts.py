@@ -55,6 +55,28 @@ if TYPE_CHECKING:  # planning types only; no runtime import cycle
 ChunkKey = Tuple[int, tuple]
 
 
+def subset_token(chunk_box: Optional["Box"],
+                 query_box: Optional["Box"]) -> Optional[tuple]:
+    """Canonical queried-subset token of a chunk under a query box:
+    ``()`` when the query covers the whole chunk (every covering query
+    shares one token), the intersected ``(lo, hi)`` corners under
+    partial coverage (the intersection pins down the coordinate slice
+    exactly — cells live inside the chunk box), and ``None`` for
+    disjoint or unknown geometry (uncacheable/unshareable). This is the
+    sharing signature both the :class:`JoinArtifactCache` keys and the
+    backends' cross-query MQO dedup
+    (``repro.backend.simulated.SimulatedBackend.execute_batch``) are
+    built from."""
+    if chunk_box is None or query_box is None:
+        return None
+    if query_box.contains_box(chunk_box):
+        return ()
+    inter = query_box.intersection(chunk_box)
+    if inter is None:
+        return None
+    return (tuple(inter.lo), tuple(inter.hi))
+
+
 @dataclasses.dataclass
 class ChunkView:
     """One join-task side: a queried chunk's coordinate slice tagged
@@ -121,15 +143,9 @@ class JoinArtifactCache:
         chunk box, so intersecting with the query box is equivalent to
         filtering by it). Unknown geometry degrades to an uncacheable
         passthrough view."""
-        if chunk_box is None or query_box is None:
+        subset = subset_token(chunk_box, query_box)
+        if subset is None:             # disjoint/unknown: nothing to cache
             return ChunkView(None, coords)
-        if query_box.contains_box(chunk_box):
-            subset: tuple = ()
-        else:
-            inter = query_box.intersection(chunk_box)
-            if inter is None:          # disjoint: nothing to cache
-                return ChunkView(None, coords)
-            subset = (tuple(inter.lo), tuple(inter.hi))
         return ChunkView((int(chunk_id), subset), coords)
 
     # --------------------------------------------------------- getters

@@ -67,6 +67,17 @@ class ExecutedQuery:
     dispatch_s: Optional[float] = None
     artifact_hits: Optional[int] = None
     artifact_misses: Optional[int] = None
+    # Cross-batch multi-query-optimization counters (None when the
+    # backend's ``mqo`` knob is off or the query was served from the
+    # result cache): of this query's join tasks, how many there were
+    # (*_total), how many it executed as the first subscriber of their
+    # sharing signature (*_executed), and how many were served by a task
+    # another query in the same admission batch already owned
+    # (*_shared_hits). Per batch, sum(executed) == distinct tasks and
+    # sum(shared_hits) == sum(total) - distinct tasks.
+    mqo_tasks_total: Optional[int] = None
+    mqo_tasks_executed: Optional[int] = None
+    mqo_shared_hits: Optional[int] = None
 
     @property
     def time_total_s(self) -> float:
@@ -90,6 +101,17 @@ class ExecutionBackend(Protocol):
     def execute(self, query: "SimilarityJoinQuery",
                 report: "QueryReport") -> ExecutedQuery:
         """Execute one planned query; returns its ExecutedQuery."""
+        ...
+
+    def execute_batch(self, queries: Sequence["SimilarityJoinQuery"],
+                      reports: Sequence["QueryReport"]
+                      ) -> List[ExecutedQuery]:
+        """Execute one admission batch's planned queries together. With
+        the backend's ``mqo`` knob on, join tasks are deduplicated by
+        sharing signature across the batch — each distinct task runs
+        once and its match count fans out to every subscribing query;
+        with ``mqo="off"`` this is exactly a per-query ``execute`` loop
+        (``execute`` itself is a batch of one)."""
         ...
 
 
@@ -159,4 +181,15 @@ def workload_summary(executed: Sequence[ExecutedQuery]) -> Dict[str, float]:
                                          for e in executed))
         out["artifact_misses"] = float(sum(e.artifact_misses or 0
                                            for e in executed))
+    if any(e.mqo_tasks_total is not None for e in executed):
+        out["mqo_tasks_total"] = float(sum(e.mqo_tasks_total or 0
+                                           for e in executed))
+        out["mqo_tasks_executed"] = float(sum(e.mqo_tasks_executed or 0
+                                              for e in executed))
+        out["mqo_shared_hits"] = float(sum(e.mqo_shared_hits or 0
+                                           for e in executed))
+    if any(getattr(e.report, "result_cache_hit", False) for e in executed):
+        out["result_cache_hits"] = float(sum(
+            1 for e in executed
+            if getattr(e.report, "result_cache_hit", False)))
     return out

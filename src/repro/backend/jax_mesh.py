@@ -67,7 +67,8 @@ class JaxMeshBackend(SimulatedBackend):
     def __init__(self, n_nodes: int, cost_model: Optional[CostModel] = None,
                  devices: Optional[Sequence[Any]] = None,
                  compiled: Optional[bool] = None,
-                 execute_joins: bool = True, prune: str = "auto"):
+                 execute_joins: bool = True, prune: str = "auto",
+                 mqo: str = "off"):
         import jax
         from jax.sharding import Mesh
         # The mesh backend always joins through the Pallas kernel; the
@@ -77,7 +78,7 @@ class JaxMeshBackend(SimulatedBackend):
                          else compiled)
         super().__init__(n_nodes, cost_model=cost_model,
                          join_backend="pallas", execute_joins=execute_joins,
-                         interpret=interpret, prune=prune)
+                         interpret=interpret, prune=prune, mqo=mqo)
         self.interpret = interpret
         self.devices = tuple(devices if devices is not None
                              else jax.devices())
@@ -209,7 +210,8 @@ class JaxMeshBackend(SimulatedBackend):
         ``CacheState.locations``."""
         import jax
         import jax.numpy as jnp
-        assert self.coordinator is not None, "backend not bound"
+        if self.coordinator is None:
+            raise RuntimeError("backend not bound — call bind() first")
         chunks = self.coordinator.chunks
         for cid in list(self._buffers):
             if cid not in state.cached:
@@ -318,20 +320,20 @@ class JaxMeshBackend(SimulatedBackend):
         return (dev, batch.fn_key, int(eps), tuple(keys))
 
     def _dispatch_joins(self, tasks, eps: int
-                        ) -> Tuple[Optional[int], float, Dict[str, int]]:
+                        ) -> Tuple[List[int], float, Dict[str, int]]:
         """Shape-bucketed per-node Pallas dispatch: every bucket's stacked
         batch (dense or block-sparse per the executor's ``prune`` knob)
         is placed on its node's device before the kernel call — ONCE per
         resident chunk set: device-placed stacks are pinned per
         (device, batch content) and re-dispatched directly on repeat
         queries, invalidated with their chunks' residency. Returns
-        (total match count, measured compute seconds = max over nodes —
-        the §4.1 ``max_n`` convention applied to measured per-node
-        wall-clock — and the query's counters)."""
+        (per-task match counts, measured compute seconds = max over
+        nodes — the §4.1 ``max_n`` convention applied to measured
+        per-node wall-clock — and the query's counters)."""
         import jax
         import jax.numpy as jnp
         node_time: Dict[int, float] = {}
-        total = 0
+        counts = [0] * len(tasks)
         batches, stats = self.executor.iter_batches(tasks, eps,
                                                     by_node=True)
         t0_all = time.perf_counter()
@@ -363,26 +365,30 @@ class JaxMeshBackend(SimulatedBackend):
             got.block_until_ready()
             node_time[batch.node] = (node_time.get(batch.node, 0.0)
                                      + time.perf_counter() - t0)
-            total += int(np.asarray(got).sum())
+            for i, c in zip(batch.idxs, np.asarray(got)):
+                counts[i] = int(c)
         stats["dispatch_s"] = time.perf_counter() - t0_all
-        return total, max(node_time.values(), default=0.0), stats
+        return counts, max(node_time.values(), default=0.0), stats
 
-    def execute(self, query: "SimilarityJoinQuery",
-                report: "QueryReport") -> ExecutedQuery:
-        """Execute one planned query on the mesh: modeled phase times
-        from the shared cost model, plus measured transfer and join
-        wall-clock/bytes from the real device work."""
-        assert self.coordinator is not None, "backend not bound"
-        time_scan = self.modeled_scan_time(report)
-        time_net = self.modeled_net_time(report)
-        tasks, work_by_node, coords_cache = self.gather_join_tasks(
-            query, report)
+    def _count_tasks(self, tasks, eps: int
+                     ) -> Tuple[List[int], Dict[str, float]]:
+        """Batch-execution seam: per-task counts via the per-node pinned
+        dispatch path, with the measured kernel wall-clock (max over
+        nodes) folded into the stats under ``measured_compute_s``."""
+        counts, node_max_s, stats = self._dispatch_joins(tasks, eps)
+        stats["measured_compute_s"] = node_max_s
+        return counts, dict(stats)
+
+    def _measured_ship(self, query: "SimilarityJoinQuery",
+                       report: "QueryReport",
+                       coords_cache: Dict[int, np.ndarray]
+                       ) -> Tuple[Optional[float], Optional[int]]:
+        """Batch-execution seam: replay this query's ship decisions as
+        real cross-device transfers (shipping stays per-query under MQO
+        — only kernel work is deduplicated across the batch)."""
         cm = {c.chunk_id: c for c in report.queried_chunks}
 
         def coords_of(cid: int) -> np.ndarray:
-            # Ship what the plan ships: the sliced extent under semantic
-            # reuse, the whole chunk otherwise (a shipped chunk becomes a
-            # full replica the placement round may keep).
             if self.coordinator.reuse == "on":
                 if cid not in coords_cache:
                     coords_cache[cid] = self._queried_coords(
@@ -391,13 +397,33 @@ class JaxMeshBackend(SimulatedBackend):
             return self.coordinator.chunks.chunk_coords(
                 cid, cm[cid].file_id)
 
-        measured_net, measured_bytes = self._ship(report, coords_of)
+        return self._ship(report, coords_of)
+
+    def execute(self, query: "SimilarityJoinQuery",
+                report: "QueryReport") -> ExecutedQuery:
+        """Execute one planned query on the mesh: modeled phase times
+        from the shared cost model, plus measured transfer and join
+        wall-clock/bytes from the real device work."""
+        if self.coordinator is None:
+            raise RuntimeError("backend not bound — call bind() first")
+        if report.result_cache_hit:
+            return self._cached_result(report)
+        time_scan = self.modeled_scan_time(report)
+        time_net = self.modeled_net_time(report)
+        tasks, work_by_node, coords_cache, _ = self.gather_join_tasks(
+            query, report)
+        # Ship what the plan ships: the sliced extent under semantic
+        # reuse, the whole chunk otherwise (a shipped chunk becomes a
+        # full replica the placement round may keep).
+        measured_net, measured_bytes = self._measured_ship(
+            query, report, coords_cache)
         matches: Optional[int] = None
         measured_compute = 0.0
         stats: Dict[str, int] = {}
         if report.join_plan is not None and self.execute_joins:
-            matches, measured_compute, stats = self._dispatch_joins(
+            counts, measured_compute, stats = self._dispatch_joins(
                 tasks, query.eps)
+            matches = sum(counts)
         time_compute = (max(work_by_node.values(), default=0)
                         / self.cost.cell_pairs_per_sec)
         t_opt = report.opt_time_chunking_s + report.opt_time_evict_place_s
@@ -424,16 +450,18 @@ def make_backend(backend: str, n_nodes: int,
                  join_backend: str = "numpy", execute_joins: bool = True,
                  devices: Optional[Sequence[Any]] = None,
                  compiled: Optional[bool] = None,
-                 prune: str = "auto") -> SimulatedBackend:
+                 prune: str = "auto", mqo: str = "off") -> SimulatedBackend:
     """Build an execution backend by name, degrading ``jax_mesh`` ->
     ``simulated`` with a warning when jax is unavailable. ``prune``
     selects the Pallas join grid (``"dense"`` / ``"block"``-sparse /
     ``"auto"`` per-task selection, the default) and applies to any
-    backend that joins through the Pallas kernel."""
+    backend that joins through the Pallas kernel; ``mqo`` toggles
+    cross-batch task dedup in ``execute_batch`` (off = seed parity)."""
     if backend == "simulated":
         return SimulatedBackend(n_nodes, cost_model=cost_model,
                                 join_fn=join_fn, join_backend=join_backend,
-                                execute_joins=execute_joins, prune=prune)
+                                execute_joins=execute_joins, prune=prune,
+                                mqo=mqo)
     if backend == "jax_mesh":
         if join_fn is not None:
             raise ValueError(
@@ -443,7 +471,8 @@ def make_backend(backend: str, n_nodes: int,
         try:
             return JaxMeshBackend(n_nodes, cost_model=cost_model,
                                   devices=devices, compiled=compiled,
-                                  execute_joins=execute_joins, prune=prune)
+                                  execute_joins=execute_joins, prune=prune,
+                                  mqo=mqo)
         except ImportError as e:
             warnings.warn(f"backend='jax_mesh' unavailable ({e}); "
                           f"falling back to the simulated backend",
@@ -451,5 +480,5 @@ def make_backend(backend: str, n_nodes: int,
             return SimulatedBackend(n_nodes, cost_model=cost_model,
                                     join_fn=join_fn,
                                     join_backend=join_backend,
-                                    execute_joins=execute_joins)
+                                    execute_joins=execute_joins, mqo=mqo)
     raise ValueError(f"unknown backend {backend!r}; known: {BACKENDS}")

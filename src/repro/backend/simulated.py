@@ -14,18 +14,25 @@ directly comparable.
 """
 from __future__ import annotations
 
-from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Tuple
+from typing import (TYPE_CHECKING, Callable, Dict, List, Optional, Sequence,
+                    Tuple)
 
 import numpy as np
 
 if TYPE_CHECKING:
     from repro.core.coordinator import (CacheCoordinator, QueryReport,
                                         SimilarityJoinQuery)
-from repro.backend.artifacts import ChunkView, JoinArtifactCache
+from repro.backend.artifacts import (ChunkView, JoinArtifactCache,
+                                     subset_token)
 from repro.backend.base import ExecutedQuery
 from repro.backend.cost_model import CostModel
 from repro.backend.executors import (JoinTask, count_similar_pairs_np,
                                      make_join_executor)
+
+# Cross-batch multi-query optimization knob: "off" preserves the seed
+# per-query execution exactly; "on" deduplicates join tasks by sharing
+# signature across each admission batch (execute once, fan counts out).
+MQO_MODES = ("off", "on")
 
 
 class SimulatedBackend:
@@ -36,11 +43,16 @@ class SimulatedBackend:
     def __init__(self, n_nodes: int, cost_model: Optional[CostModel] = None,
                  join_fn: Optional[Callable[..., int]] = None,
                  join_backend: str = "numpy", execute_joins: bool = True,
-                 interpret: bool = True, prune: str = "auto"):
+                 interpret: bool = True, prune: str = "auto",
+                 mqo: str = "off"):
+        if mqo not in MQO_MODES:
+            raise ValueError(f"unknown mqo mode {mqo!r}; "
+                             f"expected one of {MQO_MODES}")
         self.n_nodes = n_nodes
         self.cost = cost_model or CostModel()
         self.join_fn = join_fn or count_similar_pairs_np
         self.execute_joins = execute_joins
+        self.mqo = mqo
         self.executor = make_join_executor(join_backend, self.join_fn,
                                            interpret=interpret, prune=prune)
         # The pallas executor owns a JoinArtifactCache; the backend wires
@@ -99,9 +111,11 @@ class SimulatedBackend:
     def gather_join_tasks(self, query: "SimilarityJoinQuery",
                           report: "QueryReport"
                           ) -> Tuple[List[JoinTask], Dict[int, int],
-                                     Dict[int, np.ndarray]]:
+                                     Dict[int, np.ndarray], List[
+                                         Optional[tuple]]]:
         """Materialize the plan's chunk-pair work: (tasks, per-node
-        cell-pair load, per-chunk queried coordinates).
+        cell-pair load, per-chunk queried coordinates, per-task sharing
+        signatures).
 
         With a pallas executor each task side is a
         :class:`~repro.backend.artifacts.ChunkView` keyed by chunk
@@ -109,30 +123,45 @@ class SimulatedBackend:
         can memoize host-side prep across queries (numpy tasks stay raw
         arrays — the seed shape).
 
+        The signature list runs parallel to ``tasks``: each entry is
+        ``((a, subset_a), (b, subset_b), same)`` built from
+        :func:`~repro.backend.artifacts.subset_token` — the
+        content-addressed identity of the task's computation, which is
+        what cross-batch MQO deduplicates on (``None`` marks an
+        unshareable task). Signatures are derived for *every* executor
+        (the numpy path has no ChunkViews but shares identically).
+
         A pair with an empty sliced side contributes no matches; under
         the semantic-reuse knob such pairs are skipped before dispatch
         (gated so a custom ``join_fn`` still sees every pair under the
         seed-parity configuration).
         """
-        assert self.coordinator is not None, "backend not bound"
+        if self.coordinator is None:
+            raise RuntimeError("backend not bound — call bind() first")
         cm = {c.chunk_id: c for c in report.queried_chunks}
         tasks: List[JoinTask] = []
+        sigs: List[Optional[tuple]] = []
         work_by_node: Dict[int, int] = {}
         coords_cache: Dict[int, np.ndarray] = {}
         views: Dict[int, ChunkView] = {}
+        tokens: Dict[int, Optional[tuple]] = {}
         if report.join_plan is None:
-            return tasks, work_by_node, coords_cache
+            return tasks, work_by_node, coords_cache, sigs
         skip_empty = self.coordinator.reuse == "on"
         for (a, b), node in report.join_plan.pair_node.items():
             for cid in (a, b):
                 if cid not in coords_cache:
                     coords_cache[cid] = self._queried_coords(
                         cid, cm[cid].file_id, query.box)
+                    tokens[cid] = subset_token(cm[cid].box, query.box)
             ca, cb = coords_cache[a], coords_cache[b]
             work_by_node[node] = (work_by_node.get(node, 0)
                                   + ca.shape[0] * cb.shape[0])
             if skip_empty and (ca.shape[0] == 0 or cb.shape[0] == 0):
                 continue
+            ta, tb = tokens[a], tokens[b]
+            sigs.append(None if ta is None or tb is None
+                        else ((a, ta), (b, tb), a == b))
             if self.artifacts is not None:
                 for cid in (a, b):
                     if cid not in views:
@@ -141,19 +170,46 @@ class SimulatedBackend:
                 tasks.append((node, views[a], views[b], a == b))
             else:
                 tasks.append((node, ca, cb, a == b))
-        return tasks, work_by_node, coords_cache
+        return tasks, work_by_node, coords_cache, sigs
 
     # ----------------------------------------------------------- execution
+
+    def _cached_result(self, report: "QueryReport") -> ExecutedQuery:
+        """The ExecutedQuery of a result-cache hit: the match count is
+        served from the coordinator's versioned result tier and nothing
+        is scanned, shipped, or joined — every phase time is zero."""
+        return ExecutedQuery(report=report, time_scan_s=0.0, time_net_s=0.0,
+                             time_compute_s=0.0, time_opt_s=0.0,
+                             matches=report.cached_matches,
+                             backend=self.name)
+
+    def _measured_ship(self, query: "SimilarityJoinQuery",
+                       report: "QueryReport",
+                       coords_cache: Dict[int, np.ndarray]
+                       ) -> Tuple[Optional[float], Optional[int]]:
+        """Per-query measured transfer replay: the simulated backend
+        moves no real bytes (the mesh backend overrides this with real
+        ``jax.device_put`` shipping)."""
+        return None, None
+
+    def _count_tasks(self, tasks: List[JoinTask], eps: int
+                     ) -> Tuple[List[int], Dict[str, float]]:
+        """Run a task list through the join executor; returns the
+        per-task match counts and the executor's dispatch stats."""
+        counts = self.executor.count_pairs(tasks, eps)
+        return counts, dict(getattr(self.executor, "last_stats", None) or {})
 
     def execute(self, query: "SimilarityJoinQuery",
                 report: "QueryReport") -> ExecutedQuery:
         """Apply the cost model and run the join plan's compute."""
+        if report.result_cache_hit:
+            return self._cached_result(report)
         time_scan = self.modeled_scan_time(report)
         time_net = self.modeled_net_time(report)
 
         matches: Optional[int] = None
         stats = None
-        tasks, work_by_node, _ = self.gather_join_tasks(query, report)
+        tasks, work_by_node, _, _ = self.gather_join_tasks(query, report)
         if report.join_plan is not None and self.execute_joins:
             matches = sum(self.executor.count_pairs(tasks, query.eps))
             stats = getattr(self.executor, "last_stats", None)
@@ -174,3 +230,132 @@ class SimulatedBackend:
                              dispatch_s=stats.get("dispatch_s"),
                              artifact_hits=stats.get("artifact_hits"),
                              artifact_misses=stats.get("artifact_misses"))
+
+    # ----------------------------------- cross-batch MQO (execute_batch)
+
+    @staticmethod
+    def _dedup_tasks(gathered: List[Optional[tuple]], eps_list: List[int]
+                     ) -> Tuple[List[Tuple[JoinTask, int]],
+                                List[Optional[List[int]]],
+                                List[Optional[Tuple[int, int, int]]]]:
+        """Build the batch's unique-task table: walk every query's tasks
+        in admission order, keep the FIRST occurrence of each sharing
+        signature (+ eps) as the executed representative, and point
+        later subscribers at it. Returns ``(unique, refs, counters)``:
+        ``unique`` is the (task, eps) list to execute, ``refs[i]`` maps
+        query ``i``'s tasks to unique indices, and ``counters[i]`` is
+        its ``(tasks_total, tasks_executed, shared_hits)`` triple
+        (``None`` entries mirror result-cache hits, which carry no
+        tasks). Signature-less tasks are never shared."""
+        unique: List[Tuple[JoinTask, int]] = []
+        refs: List[Optional[List[int]]] = []
+        counters: List[Optional[Tuple[int, int, int]]] = []
+        seen: Dict[tuple, int] = {}
+        for g, eps in zip(gathered, eps_list):
+            if g is None:
+                refs.append(None)
+                counters.append(None)
+                continue
+            tasks, _, _, sigs = g
+            my: List[int] = []
+            executed = shared = 0
+            for task, sig in zip(tasks, sigs):
+                key = None if sig is None else (sig, int(eps))
+                idx = seen.get(key) if key is not None else None
+                if idx is not None:
+                    shared += 1
+                else:
+                    idx = len(unique)
+                    unique.append((task, int(eps)))
+                    executed += 1
+                    if key is not None:
+                        seen[key] = idx
+                my.append(idx)
+            refs.append(my)
+            counters.append((len(tasks), executed, shared))
+        return unique, refs, counters
+
+    def _execute_unique(self, unique: List[Tuple[JoinTask, int]]
+                        ) -> Tuple[List[int], Dict[str, float]]:
+        """Execute the deduplicated task table — one dispatch round per
+        distinct eps (a batch almost always has one) — and merge the
+        executor stats across rounds by summing."""
+        counts = [0] * len(unique)
+        by_eps: Dict[int, List[int]] = {}
+        for idx, (_, eps) in enumerate(unique):
+            by_eps.setdefault(eps, []).append(idx)
+        merged: Dict[str, float] = {}
+        for eps in sorted(by_eps):
+            idxs = by_eps[eps]
+            got, stats = self._count_tasks([unique[i][0] for i in idxs], eps)
+            for i, c in zip(idxs, got):
+                counts[i] = int(c)
+            for k, v in stats.items():
+                if v is not None:
+                    merged[k] = merged.get(k, 0) + v
+        return counts, merged
+
+    def execute_batch(self, queries: Sequence["SimilarityJoinQuery"],
+                      reports: Sequence["QueryReport"]
+                      ) -> List[ExecutedQuery]:
+        """Execute one admission batch. With ``mqo="off"`` (the seed
+        default) this is a per-query :meth:`execute` loop. With
+        ``mqo="on"`` the batch's join tasks are deduplicated by sharing
+        signature — each distinct ``(chunk_a, chunk_b, subset, eps,
+        same)`` task executes exactly once and its match count fans out
+        to every subscribing query, so batch kernel work scales with
+        *unique* tasks, not query count. Per-query *modeled* phase times
+        are unchanged (they describe the plan, keeping MQO-on/off rows
+        comparable); the batch-level executor stats (block-pair
+        counters, prep/dispatch wall-clock, measured compute) are
+        attributed to the batch's last planned query, mirroring how the
+        coordinator attributes its per-batch policy-round time."""
+        queries = list(queries)
+        reports = list(reports)
+        if self.mqo != "on":
+            return [self.execute(q, r) for q, r in zip(queries, reports)]
+        gathered = [None if r.result_cache_hit
+                    else self.gather_join_tasks(q, r)
+                    for q, r in zip(queries, reports)]
+        unique, refs, counters = self._dedup_tasks(
+            gathered, [q.eps for q in queries])
+        counts: List[int] = []
+        batch_stats: Dict[str, float] = {}
+        if self.execute_joins and unique:
+            counts, batch_stats = self._execute_unique(unique)
+        live = [i for i, g in enumerate(gathered) if g is not None]
+        last_live = live[-1] if live else None
+        out: List[ExecutedQuery] = []
+        for i, (q, r) in enumerate(zip(queries, reports)):
+            if gathered[i] is None:
+                out.append(self._cached_result(r))
+                continue
+            _, work_by_node, coords_cache, _ = gathered[i]
+            m_net, m_bytes = self._measured_ship(q, r, coords_cache)
+            matches: Optional[int] = None
+            if r.join_plan is not None and self.execute_joins:
+                matches = sum(counts[u] for u in refs[i])
+            stats = batch_stats if i == last_live else {}
+            measuring = m_net is not None
+            m_compute = (stats.get("measured_compute_s",
+                                   0.0 if measuring else None)
+                         if measuring else None)
+            t_opt = r.opt_time_chunking_s + r.opt_time_evict_place_s
+            total, executed, shared = counters[i]
+            out.append(ExecutedQuery(
+                report=r, time_scan_s=self.modeled_scan_time(r),
+                time_net_s=self.modeled_net_time(r),
+                time_compute_s=(max(work_by_node.values(), default=0)
+                                / self.cost.cell_pairs_per_sec),
+                time_opt_s=t_opt, matches=matches, backend=self.name,
+                measured_net_s=m_net, measured_compute_s=m_compute,
+                measured_ship_bytes=m_bytes,
+                block_pairs_total=stats.get("block_pairs_total"),
+                block_pairs_evaluated=stats.get("block_pairs_evaluated"),
+                prep_s=stats.get("prep_s"),
+                dispatch_s=stats.get("dispatch_s"),
+                artifact_hits=stats.get("artifact_hits"),
+                artifact_misses=stats.get("artifact_misses"),
+                mqo_tasks_total=total, mqo_tasks_executed=executed,
+                mqo_shared_hits=shared))
+        return out

@@ -31,6 +31,8 @@ from repro.core.placement import (JoinRecord, PlacementResult,
 from repro.core.policies import (POLICIES, POLICY_REGISTRY, PolicySpec,
                                  register_policy, resolve_policy)
 from repro.core.join_planner import JoinPlan, candidate_pairs, plan_join
+from repro.core.result_cache import (RESULT_CACHE_MODES, ResultCache,
+                                     ResultEntry)
 from repro.core.coordinator import (CacheCoordinator, QueryReport,
                                     SimilarityJoinQuery)
 from repro.core.cluster import (BACKENDS, CostModel, ExecutedQuery,
@@ -47,7 +49,8 @@ __all__ = [
     "cost_based_eviction", "JoinRecord", "PlacementResult",
     "cost_based_placement", "static_placement", "POLICIES",
     "POLICY_REGISTRY", "PolicySpec", "register_policy", "resolve_policy",
-    "JoinPlan", "candidate_pairs", "plan_join", "CacheCoordinator",
+    "JoinPlan", "candidate_pairs", "plan_join", "RESULT_CACHE_MODES",
+    "ResultCache", "ResultEntry", "CacheCoordinator",
     "QueryReport", "SimilarityJoinQuery", "BACKENDS", "CostModel",
     "ExecutedQuery", "NumpyJoinExecutor", "PallasJoinExecutor",
     "RawArrayCluster", "count_similar_pairs_np", "make_backend",

@@ -49,9 +49,11 @@ class CacheState:
         # Residency listeners (repro.backend.base.DeviceBindingListener):
         # components whose state is derived from resident chunks register
         # here so it moves/frees in lockstep with residency — execution
-        # backends committing device buffers (JaxMeshBackend) and the
+        # backends committing device buffers (JaxMeshBackend), the
         # join-artifact cache memoizing host-side prep
-        # (repro.backend.artifacts.JoinArtifactCache). Point-wise events
+        # (repro.backend.artifacts.JoinArtifactCache), and the versioned
+        # result tier (repro.core.result_cache.ResultCache), which bumps
+        # its version stamp on every residency event. Point-wise events
         # fire from ``drop`` and ``remap_split``; ``sync_devices``
         # reconciles after policy rounds that reassign the resident set
         # wholesale.

@@ -78,7 +78,11 @@ class RawArrayCluster:
                  backend: str = "simulated",
                  devices: Optional[Sequence[Any]] = None,
                  compiled: Optional[bool] = None,
-                 prune: str = "auto"):
+                 prune: str = "auto",
+                 mqo: str = "off",
+                 result_cache: str = "off",
+                 result_cache_capacity: int = 256,
+                 result_cache_ttl_s: Optional[float] = None):
         if join_fn is not None and join_backend != "numpy":
             raise ValueError(
                 "join_fn overrides the join predicate of the numpy "
@@ -90,11 +94,14 @@ class RawArrayCluster:
         self.backend = make_backend(
             backend, n_nodes, cost_model=cost_model, join_fn=join_fn,
             join_backend=join_backend, execute_joins=execute_joins,
-            devices=devices, compiled=compiled, prune=prune)
+            devices=devices, compiled=compiled, prune=prune, mqo=mqo)
         self.coordinator = CacheCoordinator(
             catalog, reader, n_nodes, node_budget_bytes, policy=policy,
             placement_mode=placement_mode, min_cells=min_cells,
-            budget_scope=budget_scope, reuse=reuse)
+            budget_scope=budget_scope, reuse=reuse,
+            result_cache=result_cache,
+            result_cache_capacity=result_cache_capacity,
+            result_cache_ttl_s=result_cache_ttl_s)
         self.backend.bind(self.coordinator)
 
     # ------------------------------------------------ backend-state views
@@ -122,23 +129,31 @@ class RawArrayCluster:
     # ----------------------------------------------------------- execution
 
     def run_query(self, query: SimilarityJoinQuery) -> ExecutedQuery:
-        """Admit one query through the coordinator and execute its plan."""
+        """Admit one query through the coordinator and execute its plan
+        (a result-cache hit report short-circuits execution; a planned
+        query's computed match count is written back to the tier)."""
         report = self.coordinator.process_query(query)
-        return self.backend.execute(query, report)
+        executed = self.backend.execute(query, report)
+        self.coordinator.record_result(query, executed)
+        return executed
 
     def run_workload(self, queries: Sequence[SimilarityJoinQuery],
                      batch_size: Optional[int] = None
                      ) -> List[ExecutedQuery]:
         """Run a workload. ``batch_size=N`` admits queries through the
         coordinator's batched planning path (shared raw-file scans, one
-        eviction/placement round per batch); ``None``/1 preserves the
-        per-query admission of the paper's experiments."""
+        eviction/placement round per batch) and the backend's
+        ``execute_batch`` (cross-batch join-task dedup under the ``mqo``
+        knob); ``None``/1 preserves the per-query admission of the
+        paper's experiments."""
         if batch_size is None or batch_size <= 1:
             return [self.run_query(q) for q in queries]
         out: List[ExecutedQuery] = []
         for i in range(0, len(queries), batch_size):
             batch = list(queries[i:i + batch_size])
             reports = self.coordinator.process_batch(batch)
-            out.extend(self.backend.execute(q, r)
-                       for q, r in zip(batch, reports))
+            executed = self.backend.execute_batch(batch, reports)
+            for q, e in zip(batch, executed):
+                self.coordinator.record_result(q, e)
+            out.extend(executed)
         return out

@@ -39,10 +39,12 @@ from repro.core.placement import JoinRecord, PlacementResult
 from repro.core.policies import (EvictionContext, PlacementContext, POLICIES,
                                  QueryAccess, build_eviction, build_placement,
                                  resolve_policy)
+from repro.core.result_cache import (RESULT_CACHE_MODES, ResultCache,
+                                     ResultEntry)
 from repro.core.rtree import RefineStats
 
-__all__ = ["POLICIES", "REUSE_MODES", "SimilarityJoinQuery", "QueryReport",
-           "CacheCoordinator"]
+__all__ = ["POLICIES", "REUSE_MODES", "RESULT_CACHE_MODES",
+           "SimilarityJoinQuery", "QueryReport", "CacheCoordinator"]
 
 # Semantic cache reuse knob: "off" preserves the seed pipeline exactly
 # (every query goes through the catalog/scan path, whole chunks ship);
@@ -89,6 +91,11 @@ class QueryReport:
     residual_bytes_scanned: int = 0     # raw bytes the residual path scanned
     reuse_scan_skips: int = 0           # file scans avoided by containment
     reuse_fully_covered: bool = False   # box-level residual was empty
+    # Result-cache observables: a hit report is planning-free — the
+    # coordinator served the stored match count (``cached_matches``)
+    # before chunking/join-planning/policy rounds ran for this query.
+    result_cache_hit: bool = False
+    cached_matches: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -134,10 +141,17 @@ class CacheCoordinator:
                  node_budget_bytes: int, policy: str = "cost",
                  placement_mode: str = "dynamic", min_cells: int = 256,
                  decay: float = 2.0, history_window: int = 64,
-                 budget_scope: str = "global", reuse: str = "off"):
+                 budget_scope: str = "global", reuse: str = "off",
+                 result_cache: str = "off",
+                 result_cache_capacity: int = 256,
+                 result_cache_ttl_s: Optional[float] = None):
         if reuse not in REUSE_MODES:
             raise ValueError(f"unknown reuse mode {reuse!r}; "
                              f"expected one of {REUSE_MODES}")
+        if result_cache not in RESULT_CACHE_MODES:
+            raise ValueError(
+                f"unknown result_cache mode {result_cache!r}; "
+                f"expected one of {RESULT_CACHE_MODES}")
         self.spec = resolve_policy(policy, placement_mode)
         self.catalog = catalog
         self.reader = reader
@@ -156,11 +170,24 @@ class CacheCoordinator:
         self.placement = build_placement(self.spec)
         self.join_history: List[JoinRecord] = []   # Alg. 3 workload W
         self.query_counter = 0
+        # Queries that went through the planning pipeline (a result-cache
+        # hit does NOT increment this — the counter is the observable
+        # proving repeats bypass chunking/planning/policy rounds).
+        self.planner_invocations = 0
+        # The versioned result tier (None when the knob is off); rides
+        # the same CacheState listener surface as device buffers and
+        # join artifacts so residency churn invalidates stored results.
+        self.result_cache: Optional[ResultCache] = None
+        if result_cache == "on":
+            self.result_cache = ResultCache(capacity=result_cache_capacity,
+                                            ttl_s=result_cache_ttl_s)
+            self.cache.add_listener(self.result_cache)
         # Cumulative semantic-reuse counters (bench_caching surfaces them).
         self.stats: Dict[str, int] = {
             "reuse_hits": 0, "reuse_bytes_served": 0,
             "residual_bytes_scanned": 0, "reuse_scan_skips": 0,
             "reuse_fully_covered_queries": 0,
+            "result_cache_hits": 0, "result_cache_misses": 0,
         }
 
     # ------------------------------------------------- legacy-shaped views
@@ -212,13 +239,40 @@ class CacheCoordinator:
                       ) -> List[QueryReport]:
         """Admit a batch: per-query chunking + join planning with raw-file
         scans shared across the batch, then a single eviction/placement
-        round over the union touch set."""
+        round over the union touch set.
+
+        With the ``result_cache`` knob on, every query is first probed
+        against the versioned result tier — a hit yields a planning-free
+        hit report (``result_cache_hit=True``) and the query skips
+        chunking, join planning, and the policy round entirely; a batch
+        of pure hits runs no policy round at all."""
         if not queries:
             return []
+        queries = list(queries)
+        hit_reports: Dict[int, QueryReport] = {}
+        to_plan: List[SimilarityJoinQuery] = []
+        plan_pos: List[int] = []           # position in the batch
+        for i, q in enumerate(queries):
+            entry = (self.result_cache.lookup(
+                ResultCache.key_of(q.box, q.eps))
+                if self.result_cache is not None else None)
+            if entry is not None:
+                self.query_counter += 1
+                self.stats["result_cache_hits"] += 1
+                hit_reports[i] = self._result_cache_report(
+                    q, entry, len(queries))
+            else:
+                if self.result_cache is not None:
+                    self.stats["result_cache_misses"] += 1
+                to_plan.append(q)
+                plan_pos.append(i)
+        if not to_plan:                    # pure-hit batch: planner untouched
+            return [hit_reports[i] for i in range(len(queries))]
         plans: List[_QueryPlan] = []
         batch_scanned: Set[int] = set()    # files materialized this batch
-        for q in queries:
+        for q in to_plan:
             self.query_counter += 1
+            self.planner_invocations += 1
             if self.spec.granularity == "file":
                 plans.append(self._plan_file_query(q, self.query_counter))
             else:
@@ -286,10 +340,11 @@ class CacheCoordinator:
 
         cached_bytes = self.cache.cached_bytes(chunk_bytes)
         cached_chunks = len(self.cache.cached)
-        reports = []
+        out: List[Optional[QueryReport]] = [
+            hit_reports.get(i) for i in range(len(queries))]
         for i, p in enumerate(plans):
             last = i == len(plans) - 1
-            reports.append(QueryReport(
+            out[plan_pos[i]] = (QueryReport(
                 query_index=p.query_index, policy=self.policy,
                 files_considered=p.files_considered,
                 files_pruned=p.files_pruned,
@@ -315,7 +370,48 @@ class CacheCoordinator:
                 reuse_scan_skips=p.reuse_scan_skips,
                 reuse_fully_covered=(p.rewrite is not None
                                      and p.rewrite.fully_covered)))
-        return reports
+        return out
+
+    # ------------------------------------------------ result-cache tier
+
+    def _result_cache_report(self, query: SimilarityJoinQuery,
+                             entry: ResultEntry,
+                             batch_size: int) -> QueryReport:
+        """The planning-free report of a result-cache hit: no files
+        considered/scanned, no join plan, zero optimization time — the
+        served observables (match count, queried cells, cache occupancy)
+        come from the stored entry, which the version stamp guarantees
+        was computed under the current residency."""
+        return QueryReport(
+            query_index=self.query_counter, policy=self.policy,
+            files_considered=0, files_pruned=0, files_scanned=[],
+            scan_bytes_by_node={}, decode_cells_by_node={},
+            queried_chunks=[], queried_cells=entry.queried_cells,
+            join_plan=None, placement=None, placement_extra_bytes=0,
+            cached_bytes_after=entry.cached_bytes_after,
+            cached_chunks_after=entry.cached_chunks_after,
+            evicted_items=0, opt_time_chunking_s=0.0,
+            opt_time_evict_place_s=0.0, refine_stats=RefineStats(),
+            batch_size=batch_size, result_cache_hit=True,
+            cached_matches=entry.matches)
+
+    def record_result(self, query: SimilarityJoinQuery,
+                      executed) -> None:
+        """Write-back after execution: store a planned query's computed
+        match count (plus the observables a future hit will serve) under
+        the current residency version. No-op when the tier is off, the
+        query was itself a hit, or the backend computed no matches
+        (``execute_joins=False``)."""
+        if self.result_cache is None:
+            return
+        report = executed.report
+        if report.result_cache_hit or executed.matches is None:
+            return
+        self.result_cache.store(
+            ResultCache.key_of(query.box, query.eps),
+            executed.matches, queried_cells=report.queried_cells,
+            cached_bytes_after=report.cached_bytes_after,
+            cached_chunks_after=report.cached_chunks_after)
 
     # ---- per-query planning: chunk granularity (cost, chunk_lru, ...) ----
 

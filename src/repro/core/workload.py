@@ -111,6 +111,44 @@ def geo_workload(domain: Box, eps: int = 1, range_frac: float = 0.12,
     return forward + forward[::-1]
 
 
+def zipf_workload(domain: Box, n_queries: int = 200, n_templates: int = 30,
+                  s: float = 1.1, eps: int = 1, field_frac: float = 0.08,
+                  seed: int = 7,
+                  anchors: Optional[Sequence[Tuple[int, int]]] = None
+                  ) -> List[SimilarityJoinQuery]:
+    """Zipf-skewed repeat workload: a pool of ``n_templates`` distinct
+    query boxes sampled once, then ``n_queries`` draws with rank-``k``
+    probability p_k ∝ 1/k^s — the "millions of users" traffic shape the
+    result-cache/MQO tiers target (most queries are exact repeats of a
+    few hot templates; the tail still exercises cold paths). Fully
+    seeded: identical arguments yield an identical query list.
+    ``anchors`` targets template fields at observed detections, as in
+    :func:`ptf1_workload`. Fields span the first two dimensions; any
+    further dimensions (e.g. PTF's time axis) are queried in full."""
+    rng = np.random.default_rng(seed)
+    ra_n, dec_n = domain.side(0), domain.side(1)
+    w = max(1, int(ra_n * field_frac))
+    h = max(1, int(dec_n * field_frac))
+    rest_lo = tuple(domain.lo[2:])
+    rest_hi = tuple(domain.hi[2:])
+    templates: List[SimilarityJoinQuery] = []
+    for _ in range(n_templates):
+        if anchors is not None:
+            a_ra, a_dec = anchors[int(rng.integers(0, len(anchors)))]
+            ra0, dec0 = int(a_ra) - w // 2, int(a_dec) - h // 2
+        else:
+            ra0 = int(rng.integers(domain.lo[0], domain.hi[0] - w + 1))
+            dec0 = int(rng.integers(domain.lo[1], domain.hi[1] - h + 1))
+        box = _clip_box((ra0, dec0) + rest_lo,
+                        (ra0 + w - 1, dec0 + h - 1) + rest_hi, domain)
+        templates.append(SimilarityJoinQuery(box=box, eps=eps))
+    ranks = np.arange(1, len(templates) + 1, dtype=np.float64)
+    probs = ranks ** -float(s)
+    probs /= probs.sum()
+    draws = rng.choice(len(templates), size=n_queries, p=probs)
+    return [templates[int(k)] for k in draws]
+
+
 def ptf_stress_workload(domain: Box, n_queries: int = 100, eps: int = 1,
                         seed: int = 17,
                         anchors: Optional[Sequence[Tuple[int, int]]] = None

@@ -1,0 +1,316 @@
+"""Cross-batch MQO + the versioned result-cache tier: match counts must
+be bit-identical with the tiers on vs off on both backends (including
+across evict -> re-admit -> split churn), each distinct join task must
+execute exactly once per batch, exact repeat queries must bypass the
+planner entirely, and the seed-parity defaults (``mqo="off"``,
+``result_cache="off"``) must leave every observable untouched."""
+import tempfile
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.backend.base import ExecutedQuery, workload_summary  # noqa: E402
+from repro.backend.jax_mesh import JaxMeshBackend  # noqa: E402
+from repro.backend.simulated import MQO_MODES, SimulatedBackend  # noqa: E402
+from repro.core.coordinator import SimilarityJoinQuery  # noqa: E402
+from repro.core.geometry import Box  # noqa: E402
+from repro.core.result_cache import (RESULT_CACHE_MODES,  # noqa: E402
+                                     ResultCache)
+from repro.core.workload import zipf_workload  # noqa: E402
+
+
+# ----------------------------------------------- ResultCache unit tests
+
+def test_key_canonicalizes_box_and_eps():
+    k1 = ResultCache.key_of(Box((1, 2), (3, 4)), 5)
+    k2 = ResultCache.key_of(Box((np.int64(1), 2), (3, np.int32(4))),
+                            np.int64(5))
+    assert k1 == k2 == ((1, 2), (3, 4), 5)
+
+
+def test_lookup_store_lru_and_capacity():
+    rc = ResultCache(capacity=2)
+    ka = ResultCache.key_of(Box((0,), (1,)), 1)
+    kb = ResultCache.key_of(Box((2,), (3,)), 1)
+    kc = ResultCache.key_of(Box((4,), (5,)), 1)
+    assert rc.lookup(ka) is None and rc.misses == 1
+    rc.store(ka, 10)
+    rc.store(kb, 20)
+    assert rc.lookup(ka).matches == 10      # refreshes ka's LRU position
+    rc.store(kc, 30)                        # capacity 2: evicts kb (LRU)
+    assert rc.capacity_evictions == 1
+    assert rc.lookup(kb) is None
+    assert rc.lookup(ka).matches == 10
+    assert rc.lookup(kc).matches == 30
+    assert len(rc) == 2
+
+
+def test_version_bump_invalidates_everything_at_once():
+    rc = ResultCache()
+    k = ResultCache.key_of(Box((0,), (9,)), 2)
+    rc.store(k, 7)
+    assert rc.lookup(k).matches == 7
+    rc.bump()
+    assert rc.lookup(k) is None and rc.stale_drops == 1
+    rc.store(k, 8)                          # restored at the new version
+    assert rc.lookup(k).matches == 8
+
+
+def test_listener_hooks_bump_and_reconcile_diffs_snapshot():
+    rc = ResultCache()
+    k = ResultCache.key_of(Box((0,), (9,)), 1)
+    rc.store(k, 1)
+    rc.on_drop(3)
+    assert rc.lookup(k) is None             # drop bumped
+    rc.store(k, 1)
+    rc.on_split(3, [])
+    assert rc.lookup(k) is None             # split bumped
+    rc.store(k, 1)
+    state = SimpleNamespace(cached={1, 2}, locations={1: 0, 2: 1})
+    rc.reconcile(state)                     # residency changed -> bump
+    assert rc.lookup(k) is None
+    rc.store(k, 1)
+    rc.reconcile(state)                     # unchanged -> version kept
+    assert rc.lookup(k).matches == 1
+    state.locations[2] = 0                  # relocation alone also bumps
+    rc.reconcile(state)
+    assert rc.lookup(k) is None
+
+
+def test_ttl_expiry_with_injected_clock():
+    now = [0.0]
+    rc = ResultCache(ttl_s=10.0, clock=lambda: now[0])
+    k = ResultCache.key_of(Box((0,), (1,)), 1)
+    rc.store(k, 5)
+    now[0] = 9.0
+    assert rc.lookup(k).matches == 5
+    now[0] = 20.1
+    assert rc.lookup(k) is None and rc.expired_drops == 1
+
+
+def test_knob_validation():
+    with pytest.raises(ValueError):
+        ResultCache(capacity=0)
+    with pytest.raises(ValueError):
+        SimulatedBackend(2, mqo="maybe")
+    assert MQO_MODES == ("off", "on")
+    assert RESULT_CACHE_MODES == ("off", "on")
+
+
+def test_unbound_backend_raises_runtime_error_not_assert():
+    """python -O must not erase the unbound-backend guard (ISSUE-6
+    satellite: assert -> RuntimeError)."""
+    q = SimilarityJoinQuery(box=Box((0, 0), (1, 1)))
+    with pytest.raises(RuntimeError, match="not bound"):
+        SimulatedBackend(2).gather_join_tasks(q, SimpleNamespace(
+            result_cache_hit=False, join_plan=None, queried_chunks=[]))
+    mesh = JaxMeshBackend(2)
+    with pytest.raises(RuntimeError, match="not bound"):
+        mesh.reconcile(SimpleNamespace(cached=set(), locations={}))
+    with pytest.raises(RuntimeError, match="not bound"):
+        mesh.execute(q, SimpleNamespace(result_cache_hit=False))
+
+
+# -------------------------------------------- workload_summary edge cases
+
+def _stub(report=None, **kw):
+    base = dict(time_scan_s=1.0, time_net_s=0.5, time_compute_s=0.25,
+                time_opt_s=0.0, matches=3)
+    base.update(kw)
+    return ExecutedQuery(report=report or SimpleNamespace(
+        scan_bytes_by_node={0: 8}, files_scanned=[1], reuse_hits=0,
+        reuse_bytes_served=0, residual_bytes_scanned=0, reuse_scan_skips=0,
+        result_cache_hit=False), **base)
+
+
+def test_summary_empty_workload():
+    s = workload_summary([])
+    assert s["queries"] == 0.0 and s["total_time_s"] == 0.0
+    for k in ("mqo_tasks_total", "prep_s", "block_pairs_total",
+              "measured_net_s", "result_cache_hits"):
+        assert k not in s
+
+
+def test_summary_optional_keys_appear_iff_any_query_has_them():
+    plain = [_stub(), _stub()]
+    s = workload_summary(plain)
+    for k in ("mqo_tasks_total", "mqo_tasks_executed", "mqo_shared_hits",
+              "prep_s", "block_pairs_total", "result_cache_hits"):
+        assert k not in s
+    mixed = [_stub(), _stub(prep_s=0.5, dispatch_s=0.1, artifact_hits=2,
+                            artifact_misses=1),
+             _stub(mqo_tasks_total=4, mqo_tasks_executed=3,
+                   mqo_shared_hits=1)]
+    s = workload_summary(mixed)
+    # One carrier is enough to pin the key; Nones sum as zero.
+    assert s["prep_s"] == 0.5 and s["artifact_hits"] == 2.0
+    assert s["mqo_tasks_total"] == 4.0
+    assert s["mqo_tasks_executed"] == 3.0 and s["mqo_shared_hits"] == 1.0
+    assert s["queries"] == 3.0
+
+
+def test_summary_counts_result_cache_hits_from_reports():
+    hit_report = SimpleNamespace(
+        scan_bytes_by_node={}, files_scanned=[], reuse_hits=0,
+        reuse_bytes_served=0, residual_bytes_scanned=0, reuse_scan_skips=0,
+        result_cache_hit=True)
+    s = workload_summary([_stub(), _stub(report=hit_report)])
+    assert s["result_cache_hits"] == 1.0
+    # Reports lacking the attribute entirely (foreign stubs) stay safe.
+    bare = SimpleNamespace(
+        scan_bytes_by_node={}, files_scanned=[], reuse_hits=0,
+        reuse_bytes_served=0, residual_bytes_scanned=0, reuse_scan_skips=0)
+    assert "result_cache_hits" not in workload_summary([_stub(report=bare)])
+
+
+# --------------------------------------------------- cluster-level tests
+
+@pytest.fixture(scope="module")
+def dataset():
+    from repro.arrayio.catalog import build_catalog
+    from repro.arrayio.generator import make_geo_files
+    files = make_geo_files(n_files=3, n_seeds=150, clones_per_seed=25,
+                           seed=13)
+    catalog, data = build_catalog(files, tempfile.mkdtemp(prefix="mqo_"),
+                                  "csv", n_nodes=4)
+    return catalog, data
+
+
+def make_cluster(dataset, backend="simulated", budget_frac=8,
+                 min_cells=512, **kw):
+    from repro.arrayio.catalog import FileReader
+    from repro.core.cluster import RawArrayCluster
+    catalog, data = dataset
+    total = sum(f.n_cells * f.cell_bytes for f in catalog.files)
+    return RawArrayCluster(catalog, FileReader(catalog, data), 4,
+                           max(total // budget_frac, 4_000) // 4,
+                           policy="cost", min_cells=min_cells,
+                           backend=backend, join_backend="pallas", **kw)
+
+
+def zipf(catalog, n_queries=24, n_templates=6, seed=7):
+    return zipf_workload(catalog.domain, n_queries=n_queries,
+                         n_templates=n_templates, s=1.1, eps=400,
+                         field_frac=0.4, seed=seed)
+
+
+def test_zipf_workload_is_seeded_and_skewed(dataset):
+    catalog, _ = dataset
+    qs = zipf(catalog, n_queries=200, n_templates=30, seed=11)
+    assert qs == zipf(catalog, n_queries=200, n_templates=30, seed=11)
+    assert qs != zipf(catalog, n_queries=200, n_templates=30, seed=12)
+    keys = [(q.box.lo, q.box.hi, q.eps) for q in qs]
+    assert len(set(keys)) <= 30
+    counts = sorted((keys.count(k) for k in set(keys)), reverse=True)
+    # Zipf(s=1.1): the hottest template dominates the tail.
+    assert counts[0] >= 5 * counts[-1]
+
+
+@pytest.mark.parametrize("backend", ["simulated", "jax_mesh"])
+def test_mqo_and_result_cache_parity(dataset, backend):
+    """The acceptance gate: bit-identical per-query matches with the
+    tiers on vs off, on both backends, under batched admission with
+    residency churn (tight budget forces evicts and re-admits)."""
+    catalog, _ = dataset
+    queries = zipf(catalog)
+    ref = make_cluster(dataset, backend, budget_frac=16, min_cells=256)
+    got = make_cluster(dataset, backend, budget_frac=16, min_cells=256,
+                       mqo="on", result_cache="on")
+    ref_m = [e.matches for e in ref.run_workload(queries, batch_size=8)]
+    opt = got.run_workload(queries, batch_size=8)
+    assert [e.matches for e in opt] == ref_m
+    assert sum(m or 0 for m in ref_m) > 0
+    summ = workload_summary(opt)
+    assert summ["mqo_shared_hits"] > 0
+    assert (summ["mqo_tasks_executed"] + summ["mqo_shared_hits"]
+            == summ["mqo_tasks_total"])
+    assert got.coordinator.stats["result_cache_hits"] > 0
+
+
+def test_parity_across_evict_readmit_split(dataset):
+    """Churn sequence: repeats, then a sub-box query forcing R-tree
+    splits, then repeats again — stored results must never be served
+    stale across the residency events."""
+    catalog, _ = dataset
+    base = zipf(catalog)[:4]
+    d = catalog.domain
+    mid = tuple((l + h) // 2 for l, h in zip(d.lo, d.hi))
+    q_sub = SimilarityJoinQuery(box=Box(d.lo, mid), eps=400)
+    seq = base + base + [q_sub] + base
+    ref = make_cluster(dataset, budget_frac=16, min_cells=256)
+    opt = make_cluster(dataset, budget_frac=16, min_cells=256,
+                       mqo="on", result_cache="on")
+    ref_m = [e.matches for e in ref.run_workload(seq, batch_size=4)]
+    opt_m = [e.matches for e in opt.run_workload(seq, batch_size=4)]
+    assert opt_m == ref_m
+    assert sum(m or 0 for m in ref_m) > 0
+    rc = opt.coordinator.result_cache
+    assert rc.invalidations > 0              # churn bumped the version
+
+
+def test_repeat_queries_bypass_the_planner(dataset):
+    """An all-resident cluster answering an exact repeat batch must not
+    invoke the planner at all (pure-hit batches skip the policy round)."""
+    catalog, _ = dataset
+    queries = zipf(catalog)[:8]
+    cluster = make_cluster(dataset, budget_frac=1, result_cache="on")
+    cluster.run_workload(queries, batch_size=8)
+    cluster.run_workload(queries, batch_size=8)   # warm residency stamp
+    before = cluster.coordinator.planner_invocations
+    repeat = cluster.run_workload(queries, batch_size=8)
+    assert cluster.coordinator.planner_invocations == before
+    assert all(e.report.result_cache_hit for e in repeat)
+    assert all(e.time_total_s == 0.0 for e in repeat)
+
+
+def test_mqo_executes_each_distinct_task_once_per_batch(dataset):
+    """Per batch, executed tasks == distinct sharing signatures: an
+    8-query batch of ONE repeated template pays for exactly one query's
+    tasks (the <= 1.1x unique-task acceptance bound, exactly)."""
+    catalog, _ = dataset
+    q = zipf(catalog)[0]
+    cluster = make_cluster(dataset, budget_frac=1, mqo="on")
+    executed = cluster.run_workload([q] * 8, batch_size=8)
+    summ = workload_summary(executed)
+    assert summ["mqo_tasks_executed"] == summ["mqo_tasks_total"] / 8
+    per_query = {e.mqo_tasks_executed for e in executed[1:]}
+    assert per_query == {0}                  # only the first owns tasks
+    assert len({e.matches for e in executed}) == 1
+
+
+def test_off_defaults_preserve_seed_observables(dataset):
+    """mqo/result_cache default off: no MQO counters on ExecutedQuery,
+    no result-cache keys in the summary, zero stats, and execute_batch
+    degenerates to the per-query loop."""
+    catalog, _ = dataset
+    queries = zipf(catalog)[:6]
+    cluster = make_cluster(dataset)
+    batched = cluster.run_workload(queries, batch_size=3)
+    looped = [e.matches
+              for e in make_cluster(dataset).run_workload(queries)]
+    assert [e.matches for e in batched] == looped
+    summ = workload_summary(batched)
+    for k in ("mqo_tasks_total", "result_cache_hits"):
+        assert k not in summ
+    assert all(e.mqo_tasks_total is None for e in batched)
+    assert cluster.coordinator.result_cache is None
+    assert cluster.coordinator.stats["result_cache_hits"] == 0
+    assert cluster.coordinator.stats["result_cache_misses"] == 0
+
+
+def test_result_cache_listener_registered_and_versioned(dataset):
+    """The tier rides CacheState.listeners: policy rounds that change
+    residency bump the version; stored entries are stamped with it."""
+    catalog, _ = dataset
+    cluster = make_cluster(dataset, budget_frac=16, min_cells=256,
+                           result_cache="on")
+    rc = cluster.coordinator.result_cache
+    assert rc in cluster.coordinator.cache.listeners
+    v0 = rc.version
+    cluster.run_workload(zipf(catalog)[:4], batch_size=4)
+    assert rc.version > v0                   # admissions bumped
+    assert len(rc) > 0
+    assert all(e.version == rc.version for e in rc._entries.values())

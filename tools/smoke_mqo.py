@@ -1,0 +1,96 @@
+#!/usr/bin/env python
+"""CI smoke gate for cross-batch MQO + the versioned result cache
+(ISSUE 6 satellite).
+
+Runs a seeded Zipf repeat workload twice through a batched cluster —
+once with ``mqo="off"``/``result_cache="off"`` (the seed-parity
+reference) and once with both tiers on — and fails unless the optimized
+run
+
+  * reports ``mqo_shared_hits > 0`` — catches a silent dedup bypass
+    where ``execute_batch`` degenerates to the per-query loop (every
+    repeated join task would quietly re-execute);
+  * reports ``result_cache_hits > 0`` — catches a dead result tier
+    (version bumping on every batch, key canonicalization drift, or a
+    lookup that never runs);
+  * returns per-query match counts bit-identical to the reference —
+    catches a fan-out or stale-entry path serving wrong counts.
+
+Usage (both CI tier-1 jobs run exactly this; the mesh job passes
+``--backend jax_mesh``):
+
+    PYTHONPATH=src python tools/smoke_mqo.py [--backend jax_mesh]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+
+
+def main(argv=None) -> int:
+    """Run the smoke workload; returns a process exit code."""
+    from repro.arrayio.catalog import FileReader, build_catalog
+    from repro.arrayio.generator import make_geo_files
+    from repro.core.cluster import RawArrayCluster, workload_summary
+    from repro.core.workload import zipf_workload
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--backend", default="simulated",
+                    choices=("simulated", "jax_mesh"))
+    args = ap.parse_args(argv)
+
+    files = make_geo_files(n_files=3, n_seeds=120, clones_per_seed=20,
+                           seed=5)
+    catalog, data = build_catalog(files,
+                                  tempfile.mkdtemp(prefix="smoke_mqo_"),
+                                  "csv", n_nodes=4)
+    # Budget covers the dataset: residency stabilizes, so repeat batches
+    # must be served from the result tier once the version stops bumping.
+    budget = sum(f.n_cells * f.cell_bytes for f in catalog.files)
+    reader = FileReader(catalog, data)
+    queries = zipf_workload(catalog.domain, n_queries=24, n_templates=6,
+                            s=1.1, eps=300, field_frac=0.4, seed=7)
+
+    def build(mqo: str, rc: str) -> RawArrayCluster:
+        return RawArrayCluster(catalog, reader, 4, budget // 4,
+                               policy="cost", min_cells=512,
+                               join_backend="pallas",
+                               backend=args.backend,
+                               mqo=mqo, result_cache=rc)
+
+    reference = build("off", "off").run_workload(queries, batch_size=8)
+    optimized_cluster = build("on", "on")
+    optimized = optimized_cluster.run_workload(queries, batch_size=8)
+    ref_m = [e.matches for e in reference]
+    opt_m = [e.matches for e in optimized]
+    summ = workload_summary(optimized)
+    stats = optimized_cluster.coordinator.stats
+    print(f"reference matches: {ref_m}")
+    print(f"optimized matches: {opt_m}")
+    print(f"mqo_tasks_total={summ.get('mqo_tasks_total')} "
+          f"mqo_tasks_executed={summ.get('mqo_tasks_executed')} "
+          f"mqo_shared_hits={summ.get('mqo_shared_hits')} "
+          f"result_cache_hits={stats['result_cache_hits']} "
+          f"result_cache_misses={stats['result_cache_misses']} "
+          f"planner_invocations="
+          f"{optimized_cluster.coordinator.planner_invocations}")
+    if summ.get("mqo_shared_hits", 0) <= 0:
+        print("FAIL: no shared task hits — cross-batch dedup is being "
+              "bypassed", file=sys.stderr)
+        return 1
+    if stats["result_cache_hits"] <= 0:
+        print("FAIL: no result-cache hits — repeat queries are being "
+              "re-planned", file=sys.stderr)
+        return 1
+    if opt_m != ref_m or sum(m or 0 for m in ref_m) <= 0:
+        print("FAIL: optimized match counts differ from the reference "
+              "(bad fan-out or stale result served?)", file=sys.stderr)
+        return 1
+    print("OK: shared-task + result-cache hits with bit-identical match "
+          "counts")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
