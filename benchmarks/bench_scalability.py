@@ -9,12 +9,16 @@ plus two executed-join sections:
     wall-clock per backend;
   * the cross-query sharing scenario (``run_mqo``): a Zipf-skewed
     repeat workload run MQO-on/off x result-cache-on/off on both
-    backends, recording the task-dedup and result-serving counters.
+    backends, recording the task-dedup and result-serving counters;
+  * the failover scenario (``run_failover``): a skewed workload with
+    the hottest node killed mid-run, replication off/on on both
+    backends, recording post-kill tail latency and the
+    replica-vs-raw recovery split.
 
-Both sections emit structured row dicts and merge them into
-``BENCH_caching.json`` (under the ``backends`` / ``mqo`` keys,
-preserving whatever ``bench_caching`` wrote) so successive PRs can diff
-the perf trajectory.
+The sections emit structured row dicts and merge them into
+``BENCH_caching.json`` (under the ``backends`` / ``mqo`` /
+``failover`` keys, preserving whatever ``bench_caching`` wrote) so
+successive PRs can diff the perf trajectory.
 
 Run the backend sections with virtual devices to exercise real
 cross-device transfers on a CPU-only host:
@@ -198,11 +202,98 @@ def run_mqo(n_queries: int = 60, n_templates: int = 12,
     return rows
 
 
+def run_failover(n_queries: int = 48, n_templates: int = 6,
+                 batch_size: int = 6, print_rows: bool = True,
+                 seed: int = 57) -> List[Dict]:
+    """Failover scenario: a skewed Zipf(s=1.5) workload run
+    replication-off/on on both backends; halfway through, the hottest
+    node (most cached bytes) is killed. Each row records the post-kill
+    tail latency (p95 of the modeled per-query time after the failure —
+    the hot-node recovery penalty the paper's single-copy cache pays),
+    the recovery source split (``recovery_bytes_from_replica`` vs
+    ``recovery_bytes_from_raw``), the recovery wall-clock, and the match
+    total — identical across every configuration and to an unfailed
+    reference by construction (the parity row asserts it)."""
+    catalog, reader = build_ptf("hdf5", n_files=12, cells=1500, seed=35)
+    queries = zipf_workload(catalog.domain, n_queries=n_queries,
+                            n_templates=n_templates, s=1.5, eps=300,
+                            seed=seed,
+                            anchors=cell_anchors(catalog, reader))
+    # 1/4 (vs the other sections' 1/8): enough leftover headroom that
+    # the hot tier can actually afford secondaries, while staying far
+    # from fitting two full copies of the dataset.
+    budget = dataset_bytes(catalog) // 4
+    half = (len(queries) // (2 * batch_size)) * batch_size
+
+    def build(backend: str, replication: str) -> RawArrayCluster:
+        return RawArrayCluster(
+            catalog, reader, N_NODES, budget // N_NODES, policy="cost",
+            min_cells=48, execute_joins=True, backend=backend,
+            join_backend="pallas", prune="auto", replication=replication,
+            replica_k=2, replication_threshold=2.0)
+
+    rows: List[Dict] = []
+    matches = {}
+    for backend in ("simulated", "jax_mesh"):
+        ref = build(backend, "off").run_workload(queries,
+                                                 batch_size=batch_size)
+        matches[f"{backend}_ref"] = sum(e.matches or 0 for e in ref)
+        for replication in ("off", "hot"):
+            label = f"{backend}_repl_{replication}"
+            cluster = build(backend, replication)
+            executed, us = timed(cluster.run_workload, queries[:half],
+                                 batch_size=batch_size)
+            cache = cluster.coordinator.cache
+            chunk_bytes, _ = cluster.coordinator.chunks.size_tables()
+            by_node = cache.bytes_by_node(chunk_bytes)
+            victim = max(by_node, key=lambda n: (by_node[n], -n))
+            event = cluster.fail_node(victim)
+            tail = cluster.run_workload(queries[half:],
+                                        batch_size=batch_size)
+            executed += tail
+            summ = workload_summary(executed)
+            matches[label] = sum(e.matches or 0 for e in executed)
+            post_kill = sorted(e.time_total_s for e in tail)
+            p95 = post_kill[min(len(post_kill) - 1,
+                                int(0.95 * len(post_kill)))]
+            rows.append({
+                "backend": backend, "replication": replication,
+                "seed": seed, "n_queries": n_queries,
+                "n_templates": n_templates, "batch_size": batch_size,
+                "bench_us": us, "matches": matches[label],
+                "killed_node": victim,
+                "failover_readmits": summ.get("failover_readmits", 0.0),
+                "recovery_bytes_from_replica":
+                    summ.get("recovery_bytes_from_replica", 0.0),
+                "recovery_bytes_from_raw":
+                    summ.get("recovery_bytes_from_raw", 0.0),
+                "recovery_s": float(event["recovery_s"]),
+                "replica_hits": summ.get("replica_hits", 0.0),
+                "replicas_dropped": summ.get("replicas_dropped", 0.0),
+                "post_kill_p95_s": p95,
+                "post_kill_total_s": sum(post_kill),
+            })
+            if print_rows:
+                print(f"failover/{label}/readmits,{us:.0f},"
+                      f"{summ.get('failover_readmits', 0):.0f}")
+                print(f"failover/{label}/recovery_bytes,0,"
+                      f"{summ.get('recovery_bytes_from_replica', 0):.0f}/"
+                      f"{summ.get('recovery_bytes_from_raw', 0):.0f}")
+                print(f"failover/{label}/recovery_s,0,"
+                      f"{event['recovery_s']:.5f}")
+                print(f"failover/{label}/post_kill_p95_s,0,{p95:.4f}")
+    if print_rows:
+        parity = len(set(matches.values())) == 1
+        print(f"failover/match_parity,0,{int(parity)}")
+    return rows
+
+
 def merge_json(path: str, backends_rows: Optional[List[Dict]] = None,
-               mqo_rows: Optional[List[Dict]] = None) -> None:
+               mqo_rows: Optional[List[Dict]] = None,
+               failover_rows: Optional[List[Dict]] = None) -> None:
     """Read-modify-write ``BENCH_caching.json``: replace only the
-    ``backends`` / ``mqo`` keys, preserving everything ``bench_caching``
-    (or a previous run) recorded."""
+    ``backends`` / ``mqo`` / ``failover`` keys, preserving everything
+    ``bench_caching`` (or a previous run) recorded."""
     data: Dict = {}
     if os.path.exists(path):
         with open(path) as fh:
@@ -211,6 +302,8 @@ def merge_json(path: str, backends_rows: Optional[List[Dict]] = None,
         data["backends"] = backends_rows
     if mqo_rows is not None:
         data["mqo"] = mqo_rows
+    if failover_rows is not None:
+        data["failover"] = failover_rows
     with open(path, "w") as fh:
         json.dump(data, fh, indent=2, sort_keys=True)
     print(f"wrote {path}")
@@ -236,8 +329,10 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     backends_rows = run_backends(n_queries=args.n_queries, seed=args.seed)
     mqo_rows = run_mqo(n_queries=max(args.n_queries * 2, 20),
                        seed=args.seed + 8)
+    failover_rows = run_failover(n_queries=max(args.n_queries, 24),
+                                 seed=args.seed + 24)
     if args.out:
-        merge_json(args.out, backends_rows, mqo_rows)
+        merge_json(args.out, backends_rows, mqo_rows, failover_rows)
 
 
 if __name__ == "__main__":

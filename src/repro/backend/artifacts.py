@@ -28,7 +28,11 @@ life-cycle, and it does so through the same
 backends use: ``on_drop`` and ``on_split`` fire point-wise from
 eviction and split-remap, and ``reconcile`` prunes artifacts of chunks
 that left residency in a wholesale policy round — artifacts can never
-outlive their chunk.
+outlive their chunk. Simulated node failures (PR 7,
+``CacheCoordinator.fail_node``) need no extra wiring: a lost sole copy
+leaves residency through the same hooks, and a chunk that survives via
+a replica (or is re-admitted) is still resident, so its artifacts stay
+valid — artifact keys name chunk content, never holder nodes.
 
 The executors consult the cache through :class:`ChunkView` handles the
 backends attach to join tasks (``repro.backend.simulated.

@@ -78,6 +78,24 @@ class ExecutedQuery:
     mqo_tasks_total: Optional[int] = None
     mqo_tasks_executed: Optional[int] = None
     mqo_shared_hits: Optional[int] = None
+    # Hot-chunk replication counters (None whenever the coordinator's
+    # ``replication`` knob is off, so single-copy workload summaries are
+    # bit-identical to the pre-replication ones): pair-sides this
+    # query's join plan served in place from a secondary replica, and
+    # secondaries the batch's replication round shed for budget
+    # (attributed to the first query executed after the round).
+    replica_hits: Optional[int] = None
+    replicas_dropped: Optional[int] = None
+    # Failure-recovery counters (None unless a ``fail_node`` event
+    # occurred since the previous ExecutedQuery was built; attached to
+    # the first query executed after the failure, whatever the
+    # replication knob): chunks re-admitted, the bytes restored from
+    # surviving replicas vs re-scanned from raw files, and the recovery
+    # round's wall-clock.
+    failover_readmits: Optional[int] = None
+    recovery_bytes_from_replica: Optional[int] = None
+    recovery_bytes_from_raw: Optional[int] = None
+    recovery_s: Optional[float] = None
 
     @property
     def time_total_s(self) -> float:
@@ -134,8 +152,8 @@ class DeviceBindingListener(Protocol):
     def reconcile(self, state: "CacheState") -> None:
         """Post-round sync: after eviction/placement reassign residency
         and locations wholesale, (re)materialize, move, or free buffers
-        so every cached chunk's committed buffer matches
-        ``state.locations``."""
+        so every cached chunk's committed buffers match its replica set
+        (``CacheState.replicas_of``)."""
         ...
 
 
@@ -188,6 +206,19 @@ def workload_summary(executed: Sequence[ExecutedQuery]) -> Dict[str, float]:
                                               for e in executed))
         out["mqo_shared_hits"] = float(sum(e.mqo_shared_hits or 0
                                            for e in executed))
+    if any(e.replica_hits is not None for e in executed):
+        out["replica_hits"] = float(sum(e.replica_hits or 0
+                                        for e in executed))
+        out["replicas_dropped"] = float(sum(e.replicas_dropped or 0
+                                            for e in executed))
+    if any(e.failover_readmits is not None for e in executed):
+        out["failover_readmits"] = float(sum(e.failover_readmits or 0
+                                             for e in executed))
+        out["recovery_bytes_from_replica"] = float(sum(
+            e.recovery_bytes_from_replica or 0 for e in executed))
+        out["recovery_bytes_from_raw"] = float(sum(
+            e.recovery_bytes_from_raw or 0 for e in executed))
+        out["recovery_s"] = sum(e.recovery_s or 0.0 for e in executed)
     if any(getattr(e.report, "result_cache_hit", False) for e in executed):
         out["result_cache_hits"] = float(sum(
             1 for e in executed

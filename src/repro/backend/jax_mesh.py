@@ -6,8 +6,9 @@ that the simulated backend only models:
 
   * **Committed cache buffers** — every chunk in ``CacheState.cached``
     is materialized as a device-resident jax array pinned (via
-    ``jax.device_put``) to the device of its ``CacheState.locations``
-    node. Buffers move/free in lockstep with admit, evict, and
+    ``jax.device_put``) to the device of each holder node in its
+    ``CacheState`` replica set (one buffer per replica copy; single-copy
+    under ``replication="off"``). Buffers move/free in lockstep with admit, evict, and
     split-remap through the :class:`~repro.backend.base.
     DeviceBindingListener` hooks (the same life-cycle points the
     CoverageIndex syncs on).
@@ -98,9 +99,13 @@ class JaxMeshBackend(SimulatedBackend):
         if not isinstance(self.executor, PallasJoinExecutor):
             raise ImportError(
                 "jax_mesh backend requires the Pallas simjoin kernel")
-        # Committed cache buffers: chunk id -> device array, and the node
-        # whose device currently holds it (the CacheState.locations view).
-        self._buffers: Dict[int, Any] = {}
+        # Committed cache buffers, one per replica copy: chunk id ->
+        # {holder node -> device array}. ``_buffer_node`` tracks the
+        # PRIMARY holder (the CacheState ``primary_map`` view the parity
+        # assertions compare against); under ``replication="off"`` every
+        # inner dict has exactly one entry and the behavior reduces to
+        # the seed's single-buffer-per-chunk map.
+        self._buffers: Dict[int, Dict[int, Any]] = {}
         self._buffer_node: Dict[int, int] = {}
         # Pinned dispatch batches: the stacked, device-placed kernel
         # inputs of a prepared batch, keyed by (device, fn_key, eps, the
@@ -124,6 +129,13 @@ class JaxMeshBackend(SimulatedBackend):
             "pinned_batch_hits": 0.0,
             "pinned_batch_misses": 0.0,
             "pinned_batches_freed": 0.0,
+            # Replication/failover device counters: bytes copied
+            # device-to-device to fill a secondary replica buffer, and
+            # committed buffers lost to a simulated node crash (kept
+            # separate from ``committed_buffers_freed`` so policy-driven
+            # frees stay comparable across replication on/off runs).
+            "replica_bytes_copied": 0.0,
+            "failover_buffers_dropped": 0.0,
         }
 
     # --------------------------------------------------------- device math
@@ -136,12 +148,26 @@ class JaxMeshBackend(SimulatedBackend):
         return devs[node % devs.size]
 
     def buffer_device(self, chunk_id: int) -> Optional[Any]:
-        """The device holding a chunk's committed buffer, or ``None``."""
-        buf = self._buffers.get(chunk_id)
-        if buf is None:
+        """The device holding a chunk's PRIMARY committed buffer, or
+        ``None`` when the chunk has no committed buffer at all."""
+        per_node = self._buffers.get(chunk_id)
+        if not per_node:
             return None
+        node = self._buffer_node.get(chunk_id)
+        buf = per_node.get(node) if node is not None else None
+        if buf is None:
+            buf = next(iter(per_node.values()))
         (dev,) = buf.devices()
         return dev
+
+    def replica_devices(self, chunk_id: int) -> Dict[int, Any]:
+        """Every committed buffer of a chunk: holder node -> device (one
+        entry per replica copy; empty when nothing is committed)."""
+        out: Dict[int, Any] = {}
+        for node, buf in self._buffers.get(chunk_id, {}).items():
+            (dev,) = buf.devices()
+            out[node] = dev
+        return out
 
     def committed_chunks(self) -> Dict[int, int]:
         """Snapshot of committed buffers: chunk id -> node."""
@@ -185,29 +211,33 @@ class JaxMeshBackend(SimulatedBackend):
                 self._unindex_pinned(key)
 
     def on_drop(self, chunk_id: int) -> None:
-        """Eviction/placement dropped a chunk: free its device buffer
-        and every pinned dispatch batch it participated in."""
-        if self._buffers.pop(chunk_id, None) is not None:
-            self.device_stats["committed_buffers_freed"] += 1
+        """Eviction/placement dropped a chunk: free the device buffer of
+        EVERY replica copy and every pinned dispatch batch it
+        participated in."""
+        per_node = self._buffers.pop(chunk_id, None)
+        if per_node:
+            self.device_stats["committed_buffers_freed"] += len(per_node)
         self._buffer_node.pop(chunk_id, None)
         self._drop_pinned(chunk_id)
 
     def on_split(self, parent_id: int, leaves: List["ChunkMeta"]) -> None:
-        """A cached chunk split: retire the parent's buffer and pinned
-        batches. The children inherit its residency/location in
-        ``CacheState`` and materialize on the inherited node's device at
-        the next reconcile."""
-        if self._buffers.pop(parent_id, None) is not None:
-            self.device_stats["committed_buffers_freed"] += 1
+        """A cached chunk split: retire the parent's buffers (every
+        replica copy) and pinned batches. The children inherit its
+        residency/replica set in ``CacheState`` and materialize on the
+        inherited nodes' devices at the next reconcile."""
+        per_node = self._buffers.pop(parent_id, None)
+        if per_node:
+            self.device_stats["committed_buffers_freed"] += len(per_node)
         self._buffer_node.pop(parent_id, None)
         self._drop_pinned(parent_id)
 
     def reconcile(self, state: "CacheState") -> None:
         """Post-round sync (the device twin of ``sync_coverage``): free
         buffers of chunks no longer resident, materialize buffers for
-        newly resident chunks, and move buffers whose location changed —
-        so every committed buffer lives on the device matching
-        ``CacheState.locations``."""
+        newly resident chunks and replica copies, move single-copy
+        buffers whose location changed, and free buffers of replicas
+        that left the set — so each cached chunk holds exactly one
+        committed buffer per node in ``CacheState.replicas_of``."""
         import jax
         import jax.numpy as jnp
         if self.coordinator is None:
@@ -223,39 +253,99 @@ class JaxMeshBackend(SimulatedBackend):
             if cid not in state.cached:
                 self._drop_pinned(cid)
         for cid in state.cached:
-            node = state.locations.get(cid)
-            if node is None:
+            want = state.replicas_of(cid)
+            if not want:
                 # Not yet located (e.g. origin placement before first
                 # touch): the chunk lives at its home node.
                 if cid not in chunks.chunk_file:
                     continue
-                node = chunks.home_node(cid)
-            buf = self._buffers.get(cid)
-            if buf is None:
-                meta = chunks.meta_of(cid)
-                if meta is None:       # retired id; re-enters next round
-                    continue
-                coords = chunks.chunk_coords(cid, meta.file_id)
-                buf = jax.device_put(jnp.asarray(coords, jnp.int32),
-                                     self.device_for_node(node))
-                buf.block_until_ready()
-                self._buffers[cid] = buf
-                self._buffer_node[cid] = node
-                self.device_stats["committed_bytes_materialized"] += \
-                    buf.nbytes
-            elif self._buffer_node.get(cid) != node:
-                old_node = self._buffer_node.get(cid)
-                moved = jax.device_put(buf, self.device_for_node(node))
+                want = (chunks.home_node(cid),)
+            have = self._buffers.get(cid, {})
+            if len(want) == 1 and len(have) == 1 and want[0] not in have:
+                # Single-copy relocation — the seed path: MOVE the one
+                # buffer with one device_put, counting neither a free nor
+                # a materialization, so replication-off device stats stay
+                # bit-identical to the single-valued implementation.
+                ((old_node, buf),) = have.items()
+                moved = jax.device_put(buf, self.device_for_node(want[0]))
                 moved.block_until_ready()
-                self._buffers[cid] = moved
-                self._buffer_node[cid] = node
+                self._buffers[cid] = {want[0]: moved}
+                self._buffer_node[cid] = want[0]
                 # Count only relocations that cross physical devices: a
                 # node change that wraps onto the same device (mesh
                 # smaller than the node count) moves no bytes — the same
                 # exclusion _ship applies to transfer routes.
-                if (old_node is None or self.device_for_node(old_node)
-                        != self.device_for_node(node)):
+                if (self.device_for_node(old_node)
+                        != self.device_for_node(want[0])):
                     self.device_stats["committed_bytes_moved"] += buf.nbytes
+                continue
+            for node in want:
+                if node in have:
+                    continue
+                src = next(iter(have.values()), None)
+                if src is None:
+                    meta = chunks.meta_of(cid)
+                    if meta is None:   # retired id; re-enters next round
+                        break
+                    coords = chunks.chunk_coords(cid, meta.file_id)
+                    buf = jax.device_put(jnp.asarray(coords, jnp.int32),
+                                         self.device_for_node(node))
+                    buf.block_until_ready()
+                    self.device_stats["committed_bytes_materialized"] += \
+                        buf.nbytes
+                else:
+                    # Replica fill: a real device-to-device copy from an
+                    # existing holder — the cheap restore path a failover
+                    # re-admission from a surviving replica rides on.
+                    buf = jax.device_put(src, self.device_for_node(node))
+                    buf.block_until_ready()
+                    (src_dev,) = src.devices()
+                    if src_dev != self.device_for_node(node):
+                        self.device_stats["replica_bytes_copied"] += \
+                            buf.nbytes
+                have = self._buffers.setdefault(cid, {})
+                have[node] = buf
+            for node in [n for n in have if n not in want]:
+                del have[node]
+                self.device_stats["committed_buffers_freed"] += 1
+            if not have:
+                self._buffers.pop(cid, None)
+                self._buffer_node.pop(cid, None)
+            else:
+                self._buffer_node[cid] = (want[0] if want[0] in have
+                                          else next(iter(have)))
+
+    # ------------------------------------------- simulated node failure
+
+    def fail_node(self, node: int) -> Dict[str, float]:
+        """Crash-restart one node on the mesh: free every committed
+        replica buffer it held (and the pinned dispatch batches staged
+        on its device), then run the coordinator's recovery. The
+        reconcile the recovery triggers re-materializes the node's lost
+        buffers for real — device-to-device from a surviving replica
+        (``replica_bytes_copied``) or from host coordinates after a raw
+        re-scan (``committed_bytes_materialized``) — so the device
+        counters reflect the actual restore traffic."""
+        if self.coordinator is None:
+            raise RuntimeError("backend not bound — call bind() first")
+        for cid in list(self._buffers):
+            per_node = self._buffers[cid]
+            if node not in per_node:
+                continue
+            per_node.pop(node)
+            self.device_stats["failover_buffers_dropped"] += 1
+            self._drop_pinned(cid)
+            if not per_node:
+                del self._buffers[cid]
+                self._buffer_node.pop(cid, None)
+            elif self._buffer_node.get(cid) == node:
+                self._buffer_node[cid] = next(iter(per_node))
+        dev = self.device_for_node(node)
+        for key in [k for k in self._pinned if k[0] == dev]:
+            del self._pinned[key]
+            self.device_stats["pinned_batches_freed"] += 1
+            self._unindex_pinned(key)
+        return self.coordinator.fail_node(node)
 
     # ----------------------------------------------------------- execution
 
@@ -286,8 +376,8 @@ class JaxMeshBackend(SimulatedBackend):
                 # pinned at the source node; stage a fresh copy only when
                 # no such buffer exists (just-scanned chunk) or the plan
                 # ships a sliced extent.
-                if not reuse_on and self._buffer_node.get(cid) == src:
-                    payload = self._buffers[cid]
+                if not reuse_on and src in self._buffers.get(cid, {}):
+                    payload = self._buffers[cid][src]
                 else:
                     payload = jax.device_put(
                         jnp.asarray(coords_of(cid), jnp.int32), src_dev)
@@ -441,7 +531,8 @@ class JaxMeshBackend(SimulatedBackend):
                              prep_s=stats.get("prep_s"),
                              dispatch_s=stats.get("dispatch_s"),
                              artifact_hits=stats.get("artifact_hits"),
-                             artifact_misses=stats.get("artifact_misses"))
+                             artifact_misses=stats.get("artifact_misses"),
+                             **self._resilience_fields(report))
 
 
 def make_backend(backend: str, n_nodes: int,

@@ -172,6 +172,44 @@ class SimulatedBackend:
                 tasks.append((node, ca, cb, a == b))
         return tasks, work_by_node, coords_cache, sigs
 
+    # ------------------------------------------- failure / replication
+
+    def fail_node(self, node: int) -> Dict[str, float]:
+        """Simulate a crash-restart of one node: every cached copy it
+        held is lost and the coordinator immediately re-admits what it
+        can — cheaply from surviving replicas, else by re-scanning raw
+        files. Returns the recovery event's counters (also attached to
+        the next ExecutedQuery)."""
+        if self.coordinator is None:
+            raise RuntimeError("backend not bound — call bind() first")
+        return self.coordinator.fail_node(node)
+
+    def _resilience_fields(self, report: "QueryReport") -> Dict[str, object]:
+        """Replication/failover counter fields for one ExecutedQuery:
+        per-query replica hits plus the coordinator's pending
+        round/recovery counters (drained here, so each event is
+        attributed to exactly one query — the first executed after it).
+        Empty when replication is off and no failure occurred, keeping
+        the single-copy ExecutedQuery bit-identical to the seed's."""
+        out: Dict[str, object] = {}
+        coord = self.coordinator
+        if coord is None:
+            return out
+        pending = coord.drain_exec_counters()
+        if coord.replication != "off":
+            jp = report.join_plan
+            out["replica_hits"] = (int(jp.replica_hits)
+                                   if jp is not None else 0)
+            out["replicas_dropped"] = int(pending.get("replicas_dropped", 0))
+        if "failover_readmits" in pending:
+            out["failover_readmits"] = int(pending["failover_readmits"])
+            out["recovery_bytes_from_replica"] = int(
+                pending.get("recovery_bytes_from_replica", 0))
+            out["recovery_bytes_from_raw"] = int(
+                pending.get("recovery_bytes_from_raw", 0))
+            out["recovery_s"] = float(pending.get("recovery_s", 0.0))
+        return out
+
     # ----------------------------------------------------------- execution
 
     def _cached_result(self, report: "QueryReport") -> ExecutedQuery:
@@ -181,7 +219,8 @@ class SimulatedBackend:
         return ExecutedQuery(report=report, time_scan_s=0.0, time_net_s=0.0,
                              time_compute_s=0.0, time_opt_s=0.0,
                              matches=report.cached_matches,
-                             backend=self.name)
+                             backend=self.name,
+                             **self._resilience_fields(report))
 
     def _measured_ship(self, query: "SimilarityJoinQuery",
                        report: "QueryReport",
@@ -229,7 +268,8 @@ class SimulatedBackend:
                              prep_s=stats.get("prep_s"),
                              dispatch_s=stats.get("dispatch_s"),
                              artifact_hits=stats.get("artifact_hits"),
-                             artifact_misses=stats.get("artifact_misses"))
+                             artifact_misses=stats.get("artifact_misses"),
+                             **self._resilience_fields(report))
 
     # ----------------------------------- cross-batch MQO (execute_batch)
 
@@ -357,5 +397,6 @@ class SimulatedBackend:
                 artifact_hits=stats.get("artifact_hits"),
                 artifact_misses=stats.get("artifact_misses"),
                 mqo_tasks_total=total, mqo_tasks_executed=executed,
-                mqo_shared_hits=shared))
+                mqo_shared_hits=shared,
+                **self._resilience_fields(r)))
         return out

@@ -15,8 +15,8 @@ carried out is the backend's job (``repro.backend``):
     compute_n = assigned cell-pair work / pair_rate.
   * ``backend="jax_mesh"`` — real execution over a jax device mesh
     (:class:`repro.backend.JaxMeshBackend`): cached chunks become
-    device-resident buffers pinned to their ``CacheState.locations``
-    node, ship decisions become measured cross-device transfers, and
+    device-resident buffers pinned to the nodes of their ``CacheState``
+    replica set, ship decisions become measured cross-device transfers, and
     each node's simjoin batch dispatches to the Pallas kernel on that
     node's device (compiled where the platform supports it).
 
@@ -82,7 +82,10 @@ class RawArrayCluster:
                  mqo: str = "off",
                  result_cache: str = "off",
                  result_cache_capacity: int = 256,
-                 result_cache_ttl_s: Optional[float] = None):
+                 result_cache_ttl_s: Optional[float] = None,
+                 replication: str = "off",
+                 replica_k: int = 2,
+                 replication_threshold: float = 3.0):
         if join_fn is not None and join_backend != "numpy":
             raise ValueError(
                 "join_fn overrides the join predicate of the numpy "
@@ -101,8 +104,20 @@ class RawArrayCluster:
             budget_scope=budget_scope, reuse=reuse,
             result_cache=result_cache,
             result_cache_capacity=result_cache_capacity,
-            result_cache_ttl_s=result_cache_ttl_s)
+            result_cache_ttl_s=result_cache_ttl_s,
+            replication=replication, replica_k=replica_k,
+            replication_threshold=replication_threshold)
         self.backend.bind(self.coordinator)
+
+    # -------------------------------------------------- failure injection
+
+    def fail_node(self, node: int):
+        """Simulate a crash-restart of one worker node (see
+        ``SimulatedBackend.fail_node``): its cached copies are lost,
+        device buffers freed, and the coordinator re-admits what it can
+        from surviving replicas or raw files. Returns the recovery
+        event's counters."""
+        return self.backend.fail_node(node)
 
     # ------------------------------------------------ backend-state views
 

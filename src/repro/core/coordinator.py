@@ -37,14 +37,17 @@ from repro.core.geometry import Box, points_in_box
 from repro.core.join_planner import JoinPlan, plan_join
 from repro.core.placement import JoinRecord, PlacementResult
 from repro.core.policies import (EvictionContext, PlacementContext, POLICIES,
-                                 QueryAccess, build_eviction, build_placement,
+                                 QueryAccess, REPLICATION_MODES,
+                                 ReplicationContext, build_eviction,
+                                 build_placement, build_replication,
                                  resolve_policy)
 from repro.core.result_cache import (RESULT_CACHE_MODES, ResultCache,
                                      ResultEntry)
 from repro.core.rtree import RefineStats
 
-__all__ = ["POLICIES", "REUSE_MODES", "RESULT_CACHE_MODES",
-           "SimilarityJoinQuery", "QueryReport", "CacheCoordinator"]
+__all__ = ["POLICIES", "REPLICATION_MODES", "REUSE_MODES",
+           "RESULT_CACHE_MODES", "SimilarityJoinQuery", "QueryReport",
+           "CacheCoordinator"]
 
 # Semantic cache reuse knob: "off" preserves the seed pipeline exactly
 # (every query goes through the catalog/scan path, whole chunks ship);
@@ -137,6 +140,12 @@ class CacheCoordinator:
     Cumulative reuse counters live in :attr:`stats`.
     """
 
+    # Per-round multiplicative decay of the replication policy's access
+    # frequencies (steady-state frequency of a chunk touched every query
+    # is 1/(1-decay) = 5.0 — the default promotion threshold of 3.0 sits
+    # comfortably below it).
+    REPLICA_FREQ_DECAY = 0.8
+
     def __init__(self, catalog: "Catalog", reader: "FileReader", n_nodes: int,
                  node_budget_bytes: int, policy: str = "cost",
                  placement_mode: str = "dynamic", min_cells: int = 256,
@@ -144,7 +153,9 @@ class CacheCoordinator:
                  budget_scope: str = "global", reuse: str = "off",
                  result_cache: str = "off",
                  result_cache_capacity: int = 256,
-                 result_cache_ttl_s: Optional[float] = None):
+                 result_cache_ttl_s: Optional[float] = None,
+                 replication: str = "off", replica_k: int = 2,
+                 replication_threshold: float = 3.0):
         if reuse not in REUSE_MODES:
             raise ValueError(f"unknown reuse mode {reuse!r}; "
                              f"expected one of {REUSE_MODES}")
@@ -152,6 +163,9 @@ class CacheCoordinator:
             raise ValueError(
                 f"unknown result_cache mode {result_cache!r}; "
                 f"expected one of {RESULT_CACHE_MODES}")
+        if replication not in REPLICATION_MODES:
+            raise ValueError(f"unknown replication mode {replication!r}; "
+                             f"expected one of {REPLICATION_MODES}")
         self.spec = resolve_policy(policy, placement_mode)
         self.catalog = catalog
         self.reader = reader
@@ -168,6 +182,20 @@ class CacheCoordinator:
         self.eviction = build_eviction(self.spec, self.cache.total_budget,
                                        decay, history_window)
         self.placement = build_placement(self.spec)
+        # Hot-chunk replication round (a no-op object under "off" — the
+        # pipeline stays bit-for-bit the single-copy path: the round,
+        # frequency tracking, and per-query counters are all skipped).
+        self.replication = replication
+        self.replicator = build_replication(replication, k=replica_k,
+                                            threshold=replication_threshold)
+        # Decayed per-chunk access frequency (the replication policy's
+        # workload stats): +1 per query touch, x REPLICA_FREQ_DECAY per
+        # policy round. Maintained only when replication is on.
+        self.access_freq: Dict[int, float] = {}
+        # Counters the execution backend attaches to the next
+        # ExecutedQuery it builds (drained once — see
+        # :meth:`drain_exec_counters`).
+        self._pending_exec: Dict[str, float] = {}
         self.join_history: List[JoinRecord] = []   # Alg. 3 workload W
         self.query_counter = 0
         # Queries that went through the planning pipeline (a result-cache
@@ -183,11 +211,17 @@ class CacheCoordinator:
                                             ttl_s=result_cache_ttl_s)
             self.cache.add_listener(self.result_cache)
         # Cumulative semantic-reuse counters (bench_caching surfaces them).
-        self.stats: Dict[str, int] = {
+        self.stats: Dict[str, float] = {
             "reuse_hits": 0, "reuse_bytes_served": 0,
             "residual_bytes_scanned": 0, "reuse_scan_skips": 0,
             "reuse_fully_covered_queries": 0,
             "result_cache_hits": 0, "result_cache_misses": 0,
+            # Replication/failover counters (stay 0 when the replication
+            # knob is off and no node ever fails).
+            "replica_hits": 0, "replicas_dropped": 0,
+            "node_failures": 0, "failover_readmits": 0,
+            "recovery_bytes_from_replica": 0, "recovery_bytes_from_raw": 0,
+            "recovery_s": 0.0,
         }
 
     # ------------------------------------------------- legacy-shaped views
@@ -209,8 +243,10 @@ class CacheCoordinator:
 
     @property
     def locations(self) -> Dict[int, int]:
-        """Cached chunk -> node map (seed-API view of CacheState)."""
-        return self.cache.locations
+        """Cached chunk -> PRIMARY node snapshot (seed-API view of
+        CacheState; the full replica tuples live behind
+        ``cache.replicas_of``)."""
+        return self.cache.primary_map()
 
     @property
     def node_budget(self) -> int:
@@ -319,6 +355,29 @@ class CacheCoordinator:
             # uncached bytes next round, the seed behavior).
             for cid in placement.dropped:
                 self.eviction.discard(cid)
+        if self.replication != "off":
+            # Replication round: update the decayed access frequencies
+            # from this batch's (remapped) touch set, then let the policy
+            # re-apply/promote secondaries into whatever budget the
+            # eviction/placement rounds left free. Runs strictly after
+            # them so residency and primaries are already final — which
+            # is what makes secondaries cheaper to drop than sole copies.
+            for cid in list(self.access_freq):
+                self.access_freq[cid] *= self.REPLICA_FREQ_DECAY
+                if self.access_freq[cid] < 1e-3:
+                    del self.access_freq[cid]
+            for acc in accesses:
+                for cm in acc.queried:
+                    self.access_freq[cm.chunk_id] = \
+                        self.access_freq.get(cm.chunk_id, 0.0) + 1.0
+            shed = self.replicator.replicate(ReplicationContext(
+                state=self.cache, chunk_bytes=chunk_bytes,
+                freq=self.access_freq, home_of=self.chunks.home_node))
+            self.stats["replicas_dropped"] += shed
+            self._pending_exec["replicas_dropped"] = \
+                self._pending_exec.get("replicas_dropped", 0) + shed
+            for p in plans:
+                self.stats["replica_hits"] += p.join_plan.replica_hits
         t_evict_place = time.perf_counter() - t0
 
         # Policy rounds reassign the resident set wholesale; reconcile any
@@ -413,6 +472,97 @@ class CacheCoordinator:
             cached_bytes_after=report.cached_bytes_after,
             cached_chunks_after=report.cached_chunks_after)
 
+    # ------------------------------------------ simulated failure handling
+
+    def drain_exec_counters(self) -> Dict[str, float]:
+        """Hand the pending replication/failover counters to the
+        execution backend (drained once — the first ``ExecutedQuery``
+        built after the event carries them; see
+        ``repro.backend.base.ExecutedQuery``)."""
+        out, self._pending_exec = self._pending_exec, {}
+        return out
+
+    def _fits_at(self, node: int, nbytes: int,
+                 chunk_bytes: Dict[int, int]) -> bool:
+        """Whether one more copy of ``nbytes`` fits at ``node`` under the
+        budget scope (per-node hard limit or unified pool), charging
+        every currently-held replica."""
+        if nbytes <= 0:
+            return True
+        used = self.cache.bytes_by_node(chunk_bytes)
+        if self.cache.budget_scope == "node":
+            return used.get(node, 0) + nbytes <= self.cache.node_budget
+        return sum(used.values()) + nbytes <= self.cache.total_budget
+
+    def fail_node(self, node: int) -> Dict[str, float]:
+        """Simulate a crash-restart of one node: every cached copy it
+        held is lost (raw files are durable; the node rejoins empty) and
+        the coordinator immediately re-admits what it can —
+
+          * a chunk with surviving replicas shrinks to the survivors,
+            then the lost copy is restored onto the restarted node from
+            a survivor when budget allows (cheap — charged to
+            ``recovery_bytes_from_replica``);
+          * a sole-copy chunk is dropped through ``CacheState.drop`` (so
+            the device-buffer, join-artifact, and result-cache listeners
+            all forget it point-wise) and re-admitted from its raw file
+            at its home node when budget allows (charged to
+            ``recovery_bytes_from_raw``).
+
+        The round ends with ``sync_coverage`` + ``sync_devices``, so
+        every listener-driven tier reconciles against the post-failure
+        residency (the result tier's snapshot diff bumps its version on
+        any replica-set change — no stored result computed against a
+        dead replica is ever served). Returns this event's counters;
+        they also accumulate in :attr:`stats` and ride the next
+        ``ExecutedQuery`` via :meth:`drain_exec_counters`."""
+        if not 0 <= node < self.n_nodes:
+            raise ValueError(f"node {node} outside 0..{self.n_nodes - 1}")
+        t0 = time.perf_counter()
+        chunk_bytes, _ = self.chunks.size_tables()
+        readmits = 0
+        from_replica = 0
+        from_raw = 0
+        for cid, reps in self.cache.location_items():
+            if cid not in self.cache.cached or node not in reps:
+                continue
+            survivors = tuple(n for n in reps if n != node)
+            nbytes = chunk_bytes.get(cid, 0)
+            if survivors:
+                self.cache.set_replicas(cid, survivors)
+                if self._fits_at(node, nbytes, chunk_bytes):
+                    self.cache.set_replicas(cid, survivors + (node,))
+                    from_replica += nbytes
+                    readmits += 1
+            else:
+                self.cache.drop(cid)
+                home = (self.chunks.home_node(cid)
+                        if self.chunks.meta_of(cid) is not None else None)
+                if home is not None and self._fits_at(home, nbytes,
+                                                      chunk_bytes):
+                    self.cache.cached.add(cid)
+                    self.cache.set_replicas(cid, (home,))
+                    from_raw += nbytes
+                    readmits += 1
+                else:
+                    # Not recoverable right now: release any eviction-
+                    # policy bookkeeping so the id cannot resurrect into
+                    # residency without a fresh scan.
+                    self.eviction.discard(cid)
+        self.cache.sync_coverage(self.chunks.meta_of)
+        self.cache.sync_devices()
+        event = {
+            "failover_readmits": float(readmits),
+            "recovery_bytes_from_replica": float(from_replica),
+            "recovery_bytes_from_raw": float(from_raw),
+            "recovery_s": time.perf_counter() - t0,
+        }
+        self.stats["node_failures"] += 1
+        for k, v in event.items():
+            self.stats[k] += v
+            self._pending_exec[k] = self._pending_exec.get(k, 0.0) + v
+        return event
+
     # ---- per-query planning: chunk granularity (cost, chunk_lru, ...) ----
 
     def _plan_chunked_query(self, query: SimilarityJoinQuery, l: int,
@@ -492,11 +642,12 @@ class CacheCoordinator:
                         reuse_bytes += sliced
         t_chunking = time.perf_counter() - t0
 
-        # Locations at query start: cache location, else home node (the scan
-        # just materialized the chunk there).
-        locations = {cm.chunk_id: self.cache.locations.get(
-            cm.chunk_id, self.catalog.by_id(cm.file_id).node)
-            for cm in queried}
+        # Locations at query start: the cached replica set (a one-tuple
+        # in the single-copy default), else the home node (the scan just
+        # materialized the chunk there).
+        locations = {cm.chunk_id: (self.cache.replicas_of(cm.chunk_id)
+                                   or self.catalog.by_id(cm.file_id).node)
+                     for cm in queried}
         jplan = plan_join(queried, locations,
                           0 if query.eps <= 0 else query.eps, self.n_nodes,
                           ship_bytes=ship_bytes or None)

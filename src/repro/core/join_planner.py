@@ -15,10 +15,16 @@ Given the queried chunks (with current locations) and the join shape radius
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
 
 from repro.core.chunk import ChunkMeta
 from repro.core.geometry import Box, expand
+
+# A chunk's starting location as handed to the planner: a bare node id
+# (single copy — the seed shape) or an ordered replica tuple, primary
+# first (hot-chunk replication). Both normalize through one path, so the
+# single-copy plan is bit-identical whichever form the caller passes.
+PlanLocation = Union[int, Tuple[int, ...]]
 
 
 @dataclasses.dataclass
@@ -37,6 +43,11 @@ class JoinPlan:
     bytes_out: Dict[int, int]                    # per-node sent bytes
     compute_load: Dict[int, int]                 # per-node cell-pair work
     replicas: Dict[int, Set[int]]                # chunk -> nodes holding it
+    # Pair-sides served in place by a SECONDARY replica (a pre-existing
+    # non-primary copy — not a copy this plan shipped): the observable
+    # proving replication absorbed work the primary would otherwise
+    # serialize. Always 0 with single-valued locations.
+    replica_hits: int = 0
 
 
 def candidate_pairs(chunks: Sequence[ChunkMeta], eps: int,
@@ -56,13 +67,17 @@ def candidate_pairs(chunks: Sequence[ChunkMeta], eps: int,
 
 
 def plan_join(chunks: Sequence[ChunkMeta],
-              locations: Dict[int, int],
+              locations: Dict[int, PlanLocation],
               eps: int,
               n_nodes: int,
               ship_bytes: Optional[Dict[int, int]] = None) -> JoinPlan:
     """Assign candidate pairs to nodes. ``locations[c]`` is where chunk ``c``
     is resident when the query starts (cache location, or the home node right
-    after a raw scan).
+    after a raw scan): a bare node id, or a primary-first replica tuple
+    when hot-chunk replication holds several copies. Every holder seeds
+    ``node_has``, so the greedy (ship bytes, balance penalty) cost
+    naturally routes each pair to its least-loaded replica; transfers
+    source from the original holder with the least outbound pressure.
 
     ``ship_bytes`` optionally overrides the per-chunk transfer cost: the
     semantic-reuse layer charges a covering cached chunk only for the
@@ -77,9 +92,16 @@ def plan_join(chunks: Sequence[ChunkMeta],
     # rocks first (classic LPT scheduling).
     pairs.sort(key=lambda p: -(meta[p[0]].n_cells * meta[p[1]].n_cells))
 
+    # Normalize every location through ONE path (int -> one-tuple), so
+    # the single-copy plan is identical whichever form the caller passed.
+    holders: Dict[int, Tuple[int, ...]] = {
+        cid: (loc if isinstance(loc, tuple) else (int(loc),))
+        for cid, loc in locations.items()}
+    primary: Dict[int, int] = {cid: reps[0] for cid, reps in holders.items()}
     node_has: Dict[int, Set[int]] = {n: set() for n in range(n_nodes)}
-    for cid, node in locations.items():
-        node_has[node].add(cid)
+    for cid, reps in holders.items():
+        for node in reps:
+            node_has[node].add(cid)
     load: Dict[int, int] = {n: 0 for n in range(n_nodes)}
     bytes_in: Dict[int, int] = {n: 0 for n in range(n_nodes)}
     bytes_out: Dict[int, int] = {n: 0 for n in range(n_nodes)}
@@ -90,6 +112,7 @@ def plan_join(chunks: Sequence[ChunkMeta],
     mean_load_target = (sum(meta[a].n_cells * meta[b].n_cells
                             for a, b in pairs) / max(n_nodes, 1)) or 1.0
 
+    replica_hits = 0
     for a, b in pairs:
         ca, cb = meta[a], meta[b]
         work = ca.n_cells * cb.n_cells
@@ -112,12 +135,21 @@ def plan_join(chunks: Sequence[ChunkMeta],
         load[n] += work
         for cid in {a, b}:
             if cid not in node_has[n]:
-                src = locations[cid]
+                # Ship from the ORIGINAL holder with the least outbound
+                # pressure (deterministic tie-break: tuple order, which
+                # is primary-first) — the single-holder case reduces to
+                # the seed's ``src = locations[cid]``.
+                src = min(holders[cid],
+                          key=lambda s: (bytes_out[s],
+                                         holders[cid].index(s)))
                 node_has[n].add(cid)
                 transfers.append((cid, n))
                 routes.append((cid, src, n))
                 bytes_in[n] += wire[cid]
                 bytes_out[src] += wire[cid]
+            elif n in holders[cid] and n != primary[cid]:
+                # Served in place by a pre-existing secondary copy.
+                replica_hits += 1
 
     replicas: Dict[int, Set[int]] = {}
     for cid in meta:
@@ -125,4 +157,4 @@ def plan_join(chunks: Sequence[ChunkMeta],
     return JoinPlan(pairs=pairs, pair_node=pair_node, transfers=transfers,
                     transfer_routes=routes, bytes_in=bytes_in,
                     bytes_out=bytes_out, compute_load=load,
-                    replicas=replicas)
+                    replicas=replicas, replica_hits=replica_hits)

@@ -89,7 +89,8 @@ class PlacementContext:
 class EvictionPolicy(Protocol):
     """Decides cache residency. ``finalize_batch`` is the deferred round
     (chunk granularity); ``admit_online``/``is_resident`` drive the online
-    file-unit path. Both mutate ``state.cached``/``state.locations``."""
+    file-unit path. Both mutate residency and the replica-location map
+    through the ``CacheState`` accessor surface."""
 
     name: str
 
@@ -210,7 +211,7 @@ class _RecencyFrequencyEviction:
     def _admit(self, unit: ChunkMeta, state: "CacheState") -> int:
         evicted = self.cache.admit(unit.chunk_id, unit.nbytes)
         for e in evicted:
-            state.locations.pop(e, None)
+            state.clear_location(e)
         self.cache.touch(unit.chunk_id)
         return len(evicted)
 
@@ -270,7 +271,7 @@ def _default_replicas(ctx: PlacementContext) -> Dict[int, Set[int]]:
                 if cid in ctx.state.cached}
     for cid in ctx.state.cached:
         if cid not in replicas:
-            loc = ctx.state.locations.get(cid)
+            loc = ctx.state.node_of(cid)
             replicas[cid] = {ctx.home_of(cid) if loc is None else loc}
     return replicas
 
@@ -290,7 +291,7 @@ class CostPlacement:
                                       ctx.decay, ctx.history_window)
         for cid in result.dropped:
             ctx.state.cached.discard(cid)
-        ctx.state.locations = dict(result.locations)
+        ctx.state.assign_locations(result.locations)
         extra = sum(ctx.chunk_bytes[c] for c, _ in result.fallback_moves)
         return result, extra
 
@@ -309,7 +310,7 @@ class StaticPlacement:
                                   ctx.node_budgets)
         for cid in result.dropped:
             ctx.state.cached.discard(cid)
-        ctx.state.locations = dict(result.locations)
+        ctx.state.assign_locations(result.locations)
         return result, 0
 
 
@@ -333,13 +334,163 @@ class OriginPlacement:
                                       ctx.node_budgets)
             for cid in result.dropped:
                 ctx.state.drop(cid)
-            ctx.state.locations = dict(result.locations)
+            ctx.state.assign_locations(result.locations)
             return result, 0
         for cm in ctx.queried:
             if cm.chunk_id in ctx.state.cached:
-                ctx.state.locations.setdefault(cm.chunk_id,
-                                               ctx.home_of(cm.chunk_id))
+                ctx.state.ensure_location(cm.chunk_id,
+                                          ctx.home_of(cm.chunk_id))
         return None, 0
+
+
+# ---------------------------------------------------------------------------
+# Replication policies
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ReplicationContext:
+    """Everything a replication round may consult: the cache state
+    (post-eviction/placement, single-valued again), the size table, and
+    the coordinator's decayed per-chunk access frequencies."""
+
+    state: "CacheState"
+    chunk_bytes: Dict[int, int]
+    freq: Dict[int, float]                    # decayed access frequency
+    home_of: Callable[[int], int]
+
+
+class ReplicationPolicy(Protocol):
+    """Decides which cached chunks hold extra copies. Runs AFTER the
+    eviction and placement rounds (which own residency and primaries and
+    plan under full budgets): it re-applies surviving secondaries and
+    promotes hot chunks strictly into leftover budget — which is what
+    makes secondaries structurally cheaper to drop than sole copies.
+    Returns the number of secondaries shed this round."""
+
+    name: str
+
+    def replicate(self, ctx: ReplicationContext) -> int:
+        """Run one replication round; returns #secondaries dropped."""
+        ...
+
+
+class NoReplication:
+    """The default: single-copy caching, bit-for-bit the pre-replication
+    pipeline (the round is a no-op and locations stay one-tuples)."""
+
+    name = "off"
+
+    def __init__(self, k: int = 1, threshold: float = 0.0):
+        pass
+
+    def replicate(self, ctx: ReplicationContext) -> int:
+        """No-op round: nothing promoted, nothing dropped."""
+        return 0
+
+
+class HotChunkReplication:
+    """Promote chunks whose decayed access frequency crosses
+    ``threshold`` to ``k`` replicas on the least-loaded nodes, within
+    whatever budget the eviction/placement rounds left free.
+
+    Each round: (1) re-apply the previous round's secondaries that are
+    still backed by a cached chunk and still fit — a budget squeeze or a
+    hotter competitor sheds secondaries FIRST while residency (sole
+    copies) is untouched, the replica-aware eviction ordering; (2)
+    promote hot chunks (hottest first, deterministic id tie-break) to
+    ``k`` copies, choosing for each new copy the node with the fewest
+    cached bytes (tie: lowest node id). Secondaries are charged at their
+    holder — per-node under ``budget_scope="node"``, against the unified
+    pool under ``"global"`` — so a replica can never push a node or the
+    cluster over budget."""
+
+    name = "hot"
+
+    def __init__(self, k: int = 2, threshold: float = 3.0):
+        if k < 1:
+            raise ValueError(f"replica count k must be >= 1, got {k}")
+        self.k = k
+        self.threshold = threshold
+        # Secondaries decided in previous rounds, re-applied (budget
+        # permitting) after each placement round wipes locations back to
+        # single-valued.
+        self._secondaries: Dict[int, Tuple[int, ...]] = {}
+
+    def replicate(self, ctx: ReplicationContext) -> int:
+        """One replication round; returns #secondaries shed."""
+        state = ctx.state
+        budgets = state.placement_budgets()
+        used = state.bytes_by_node(ctx.chunk_bytes)
+        free_total = state.total_budget - sum(used.values())
+        dropped = 0
+
+        def fits(node: int, nb: int) -> bool:
+            if state.budget_scope == "node":
+                return used.get(node, 0) + nb <= budgets.get(node, 0)
+            return free_total >= nb
+
+        def add(cid: int, node: int, nb: int) -> None:
+            nonlocal free_total
+            state.set_replicas(cid, state.replicas_of(cid) + (node,))
+            used[node] = used.get(node, 0) + nb
+            free_total -= nb
+
+        # Phase 1: re-apply surviving secondaries under leftover budget.
+        for cid in sorted(self._secondaries):
+            if cid not in state.cached:
+                continue          # chunk evicted: copies died with it
+            reps = state.replicas_of(cid)
+            if not reps:
+                continue
+            nb = ctx.chunk_bytes.get(cid, 0)
+            for node in self._secondaries[cid]:
+                if node in reps or node == reps[0]:
+                    continue      # already applied / became the primary
+                if nb > 0 and fits(node, nb):
+                    add(cid, node, nb)
+                    reps = state.replicas_of(cid)
+                else:
+                    dropped += 1
+        # Phase 2: promote hot chunks, hottest first.
+        hot = [cid for cid in state.cached
+               if ctx.freq.get(cid, 0.0) >= self.threshold]
+        hot.sort(key=lambda c: (-ctx.freq.get(c, 0.0), c))
+        for cid in hot:
+            nb = ctx.chunk_bytes.get(cid, 0)
+            if nb <= 0 or not state.replicas_of(cid):
+                continue          # unsized or not yet located
+            while len(state.replicas_of(cid)) < self.k:
+                reps = state.replicas_of(cid)
+                cands = [n for n in range(state.n_nodes)
+                         if n not in reps and fits(n, nb)]
+                if not cands:
+                    break
+                add(cid, min(cands, key=lambda n: (used.get(n, 0), n)), nb)
+        # Remember the end-state secondaries for the next round.
+        self._secondaries = {
+            cid: state.replicas_of(cid)[1:] for cid in state.cached
+            if len(state.replicas_of(cid)) > 1}
+        return dropped
+
+
+REPLICATION_MODES = ("off", "hot")
+
+REPLICATION_REGISTRY: Dict[str, Callable[..., ReplicationPolicy]] = {
+    "off": NoReplication,
+    "hot": HotChunkReplication,
+}
+
+
+def build_replication(name: str, k: int = 2,
+                      threshold: float = 3.0) -> ReplicationPolicy:
+    """Construct the replication policy named by ``name`` from the
+    registry (``"off"`` = single-copy no-op, ``"hot"`` = hot-chunk
+    promotion with ``k`` copies past ``threshold`` decayed accesses)."""
+    factory = REPLICATION_REGISTRY.get(name)
+    if factory is None:
+        raise ValueError(f"unknown replication mode {name!r}; "
+                         f"known: {sorted(REPLICATION_REGISTRY)}")
+    return factory(k=k, threshold=threshold)
 
 
 # ---------------------------------------------------------------------------

@@ -177,7 +177,7 @@ class ResultCache:
         wholesale, so no point-wise hook fires for a newly admitted
         chunk. A round that leaves residency untouched keeps the version
         (warm repeats stay servable)."""
-        snap = (frozenset(state.cached), frozenset(state.locations.items()))
+        snap = (frozenset(state.cached), state.location_snapshot())
         if snap != self._snapshot:
             self._snapshot = snap
             self.bump()

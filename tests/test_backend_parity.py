@@ -90,7 +90,7 @@ def test_committed_buffers_track_locations(dataset):
     assert isinstance(backend, JaxMeshBackend)
     assert set(backend.committed_chunks()) == cache.cached
     assert len(cache.cached) > 0
-    for cid, node in cache.locations.items():
+    for cid, node in cache.primary_map().items():
         assert backend.buffer_device(cid) == backend.device_for_node(node), \
             f"chunk {cid} not on node {node}'s device"
 
@@ -106,8 +106,9 @@ def test_distinct_devices_and_real_transfers(dataset):
     executed = cluster.run_workload(fixed_workload(catalog))
     backend = cluster.backend
     cache = cluster.coordinator.cache
-    nodes_used = set(cache.locations.values())
-    devices_used = {backend.buffer_device(cid) for cid in cache.locations}
+    nodes_used = set(cache.primary_map().values())
+    devices_used = {backend.buffer_device(cid)
+                    for cid in cache.primary_map()}
     assert len(devices_used) == len(nodes_used) > 1
     assert backend.device_stats["ship_bytes_measured"] > 0
     assert sum(e.measured_ship_bytes for e in executed) \

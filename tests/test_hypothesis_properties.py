@@ -7,9 +7,14 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+from repro.backend.artifacts import JoinArtifactCache  # noqa: E402
+from repro.core.cache_state import CacheState  # noqa: E402
 from repro.core.eviction import Triple, cost_based_eviction  # noqa: E402
 from repro.core.geometry import (Box, bounding_box, box_subtract,  # noqa: E402
                                  expand, points_in_box, residual_boxes)
+from repro.core.policies import (HotChunkReplication,  # noqa: E402
+                                 ReplicationContext)
+from repro.core.result_cache import ResultCache  # noqa: E402
 from repro.core.rtree import EvolvingRTree  # noqa: E402
 
 
@@ -41,6 +46,144 @@ def test_budget_never_exceeded_property(seed, budget):
     assert used <= max(budget, current_bytes)
     for t in res.state:
         assert t.chunk_ids <= res.cached_chunks
+
+
+# ---------------------------------------------------------- replication
+
+def _random_state_ops(rnd, state, n_nodes, n_ops=60):
+    """Drive a CacheState through a random admit/drop/split-like/fail
+    sequence using only the accessor surface; yields after every op."""
+    for _ in range(n_ops):
+        op = rnd.randrange(5)
+        cid = rnd.randint(1, 24)
+        if op == 0:                      # admit with a random replica set
+            state.cached.add(cid)
+            ks = rnd.randint(1, n_nodes)
+            state.set_replicas(
+                cid, tuple(rnd.randrange(n_nodes) for _ in range(ks)))
+        elif op == 1:                    # admit single-copy
+            state.cached.add(cid)
+            state.ensure_location(cid, rnd.randrange(n_nodes))
+        elif op == 2:                    # full drop
+            state.drop(cid)
+        elif op == 3:                    # one copy dies
+            state.drop_replica(cid, rnd.randrange(n_nodes))
+        else:                            # node failure: every copy there
+            node = rnd.randrange(n_nodes)
+            for c, reps in state.location_items():
+                if node in reps:
+                    state.drop_replica(c, node)
+        yield
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 6))
+@settings(max_examples=40, deadline=None)
+def test_replica_sets_wellformed_and_bytes_account_per_replica(seed,
+                                                               n_nodes):
+    """After ANY accessor-driven op sequence: every stored replica set
+    is a non-empty de-duplicated tuple whose head is the primary, every
+    cached chunk stays located, and per-node byte accounting equals the
+    sum of per-replica charges (= ``cached_bytes``)."""
+    import random
+    rnd = random.Random(seed)
+    state = CacheState(n_nodes=n_nodes, node_budget_bytes=10_000)
+    chunk_bytes = {cid: rnd.randint(1, 500) for cid in range(1, 25)}
+    for _ in _random_state_ops(rnd, state, n_nodes):
+        for c, reps in state.location_items():
+            assert reps, "empty replica tuple stored"
+            assert len(set(reps)) == len(reps), "duplicate replica"
+            assert state.node_of(c) == reps[0]
+            assert all(0 <= n < n_nodes for n in reps)
+        assert all(state.replicas_of(c) for c in state.cached)
+        per_node = state.bytes_by_node(chunk_bytes)
+        assert sum(per_node.values()) == sum(
+            chunk_bytes[c] * len(state.replicas_of(c))
+            for c in state.cached)
+        assert sum(per_node.values()) == state.cached_bytes(chunk_bytes)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 3), st.integers(2, 5),
+       st.sampled_from(["global", "node"]))
+@settings(max_examples=40, deadline=None)
+def test_hot_replication_never_touches_residency_or_primaries(
+        seed, k, n_nodes, scope):
+    """A replication round only ADDS copies within leftover budget: the
+    resident set and every primary are bit-identical afterwards, no
+    chunk exceeds ``k`` copies, budget-charged bytes never grow past the
+    scope's limit, and an immediate second round is an exact no-op."""
+    import random
+    rnd = random.Random(seed)
+    budget = rnd.randint(500, 3000)
+    state = CacheState(n_nodes=n_nodes, node_budget_bytes=budget,
+                       budget_scope=scope)
+    chunk_bytes = {}
+    for cid in range(1, rnd.randint(3, 15)):
+        chunk_bytes[cid] = rnd.randint(1, budget)
+        state.cached.add(cid)
+        state.set_replicas(cid, rnd.randrange(n_nodes))
+    freq = {cid: rnd.uniform(0.0, 6.0) for cid in chunk_bytes}
+    pol = HotChunkReplication(k=k, threshold=3.0)
+    before_primary = before_cached = None
+    for round_no in range(2):
+        before_primary = state.primary_map()
+        before_cached = set(state.cached)
+        before_used = state.bytes_by_node(chunk_bytes)
+        shed = pol.replicate(ReplicationContext(
+            state=state, chunk_bytes=chunk_bytes, freq=freq,
+            home_of=lambda c: 0))
+        assert shed >= 0
+        assert state.primary_map() == before_primary
+        assert state.cached == before_cached
+        after_used = state.bytes_by_node(chunk_bytes)
+        if scope == "node":
+            for n in range(n_nodes):
+                assert after_used.get(n, 0) <= max(budget,
+                                                   before_used.get(n, 0))
+        else:
+            assert sum(after_used.values()) <= max(
+                state.total_budget, sum(before_used.values()))
+        for c in state.cached:
+            reps = state.replicas_of(c)
+            assert 1 <= len(reps) <= max(k, len(set(reps)))
+            assert len(set(reps)) == len(reps)
+        if round_no == 1:                # idempotent re-run
+            assert shed == 0
+            assert after_used == before_used
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 5))
+@settings(max_examples=30, deadline=None)
+def test_drop_split_fail_never_orphans_artifact_or_result_entries(
+        seed, n_nodes):
+    """The listener contract under churn: after any drop/split-like/fail
+    sequence plus the post-round ``sync_devices`` reconcile, the
+    artifact cache holds no entry for a non-resident chunk and the
+    result tier serves no entry stored before a residency change."""
+    import random
+    rnd = random.Random(seed)
+    state = CacheState(n_nodes=n_nodes, node_budget_bytes=10_000)
+    artifacts = JoinArtifactCache()
+    results = ResultCache()
+    state.add_listener(artifacts)
+    state.add_listener(results)
+    key = ResultCache.key_of(Box((0,), (9,)), 1)
+    coords = np.zeros((3, 2), dtype=np.int64)
+    box = Box((0, 0), (9, 9))
+    prev = (frozenset(state.cached), state.location_snapshot())
+    for _ in _random_state_ops(rnd, state, n_nodes, n_ops=40):
+        for cid in state.cached:         # warm artifacts for residents
+            artifacts.sorted_coords(artifacts.view(cid, box, box, coords),
+                                    lambda: coords)
+        results.store(key, 1)            # stored against current state
+        state.sync_devices()             # reconcile every listener
+        assert artifacts.chunk_ids() <= state.cached, "orphaned artifact"
+        now = (frozenset(state.cached), state.location_snapshot())
+        if now != prev:                  # ANY residency/replica change
+            assert results.lookup(key) is None, \
+                "result entry survived a residency change"
+        prev = now
+    state.sync_devices()
+    assert artifacts.chunk_ids() <= state.cached
 
 
 # ------------------------------------------------------------- geometry

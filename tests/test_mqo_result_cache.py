@@ -15,6 +15,7 @@ jax = pytest.importorskip("jax")
 from repro.backend.base import ExecutedQuery, workload_summary  # noqa: E402
 from repro.backend.jax_mesh import JaxMeshBackend  # noqa: E402
 from repro.backend.simulated import MQO_MODES, SimulatedBackend  # noqa: E402
+from repro.core.cache_state import CacheState  # noqa: E402
 from repro.core.coordinator import SimilarityJoinQuery  # noqa: E402
 from repro.core.geometry import Box  # noqa: E402
 from repro.core.result_cache import (RESULT_CACHE_MODES,  # noqa: E402
@@ -69,14 +70,21 @@ def test_listener_hooks_bump_and_reconcile_diffs_snapshot():
     rc.on_split(3, [])
     assert rc.lookup(k) is None             # split bumped
     rc.store(k, 1)
-    state = SimpleNamespace(cached={1, 2}, locations={1: 0, 2: 1})
+    state = CacheState(n_nodes=2, node_budget_bytes=1 << 20)
+    state.cached = {1, 2}
+    state.set_replicas(1, 0)
+    state.set_replicas(2, 1)
     rc.reconcile(state)                     # residency changed -> bump
     assert rc.lookup(k) is None
     rc.store(k, 1)
     rc.reconcile(state)                     # unchanged -> version kept
     assert rc.lookup(k).matches == 1
-    state.locations[2] = 0                  # relocation alone also bumps
+    state.set_replicas(2, 0)                # relocation alone also bumps
     rc.reconcile(state)
+    assert rc.lookup(k) is None
+    rc.store(k, 1)
+    state.set_replicas(2, (0, 1))           # replica-set growth with an
+    rc.reconcile(state)                     # unchanged primary also bumps
     assert rc.lookup(k) is None
 
 
