@@ -288,12 +288,123 @@ def run_failover(n_queries: int = 48, n_templates: int = 6,
     return rows
 
 
+#: Telemetry-only recording hooks outside ``src/repro/obs/`` whose
+#: self-time counts as instrumentation cost in ``run_observability``.
+_TELEMETRY_FUNCS = frozenset({
+    "record_executed", "register_summary_counters", "_record",
+    "_record_cache_health", "_mirror_device_stats"})
+
+
+def run_observability(n_queries: int = 60, n_templates: int = 12,
+                      batch_size: int = 8, repeats: int = 5,
+                      print_rows: bool = True, seed: int = 41) -> List[Dict]:
+    """Telemetry overhead scenario (ISSUE 8): the ``run_mqo`` mixed
+    workload (reuse + MQO + result cache + hot replication, so every
+    instrumented path fires) run ``telemetry="off"`` vs ``"on"`` on the
+    simulated backend. The acceptance number, ``overhead_frac`` (<3%),
+    is the *attributed* instrumentation share of a profiled
+    telemetry-on run: the summed self-time of every function in
+    ``src/repro/obs/`` plus the recording hooks (``record_executed``,
+    cache-health/device-stat mirrors), over total run time — a
+    deterministic measurement that cProfile's per-call cost biases
+    *upward*, i.e. conservative. Differencing two wall-clocks cannot
+    resolve a sub-1% effect on a shared machine (run-to-run jitter is
+    an order of magnitude larger than the instrumentation), so the raw
+    on-vs-off min-of-``repeats`` delta is recorded as the informational
+    ``wall_delta_frac`` only. The row also carries the span volume and
+    the off/on counter parity flag (every non-timing summary value must
+    be bit-identical across modes)."""
+    import cProfile
+    import gc
+    import pstats
+    catalog, reader = build_ptf("hdf5", n_files=12, cells=1500, seed=35)
+    queries = zipf_workload(catalog.domain, n_queries=n_queries,
+                            n_templates=n_templates, s=1.1, eps=300,
+                            seed=seed,
+                            anchors=cell_anchors(catalog, reader))
+    budget = dataset_bytes(catalog) // 8
+
+    def once(telemetry: str, profile: bool = False):
+        cluster = RawArrayCluster(
+            catalog, reader, N_NODES, budget // N_NODES, policy="cost",
+            min_cells=48, execute_joins=True, backend="simulated",
+            join_backend="pallas", prune="auto", reuse="on", mqo="on",
+            result_cache="on", replication="hot", telemetry=telemetry)
+        # GC pauses (not the instrumentation) dominate run-to-run jitter
+        # on this Python-geometry-heavy workload: collect up front and
+        # keep the collector out of the timed region in both modes.
+        gc.collect()
+        gc.disable()
+        try:
+            prof = None
+            if profile:
+                prof = cProfile.Profile()
+                prof.enable()
+            executed, us = timed(cluster.run_workload, queries,
+                                 batch_size=batch_size)
+            if prof is not None:
+                prof.disable()
+        finally:
+            gc.enable()
+        return cluster, workload_summary(executed), us, prof
+
+    best: Dict[str, float] = {}
+    summaries: Dict[str, Dict] = {}
+    spans = 0
+    once("off"), once("on")           # warmup: JIT/page-cache/allocator
+    # Interleave the repeats, alternating which mode goes first each
+    # round (whichever runs second inherits a warmer allocator); keep
+    # the minimum, the least-noise wall-clock estimate.
+    for r in range(repeats):
+        order = ("off", "on") if r % 2 == 0 else ("on", "off")
+        for mode in order:
+            cluster, summ, us, _ = once(mode)
+            best[mode] = min(best.get(mode, float("inf")), us)
+            summaries[mode] = summ
+            if mode == "on":
+                spans = len(cluster.telemetry.tracer.spans)
+    wall_delta = (best["on"] - best["off"]) / best["off"]
+
+    _, _, _, prof = once("on", profile=True)
+    st = pstats.Stats(prof)
+    telemetry_s = sum(
+        tt for (fname, _lineno, func), (_cc, _nc, tt, _ct, _callers)
+        in st.stats.items()
+        if "/repro/obs/" in fname.replace("\\", "/")
+        or func in _TELEMETRY_FUNCS)
+    overhead = telemetry_s / st.total_tt if st.total_tt else 0.0
+
+    parity = all(summaries["off"][k] == summaries["on"][k]
+                 for k in summaries["off"] if not k.endswith("_s"))
+    row = {
+        "backend": "simulated", "seed": seed, "n_queries": n_queries,
+        "n_templates": n_templates, "batch_size": batch_size,
+        "repeats": repeats, "off_us": best["off"], "on_us": best["on"],
+        "wall_delta_frac": wall_delta,
+        "telemetry_self_us": telemetry_s * 1e6,
+        "overhead_frac": overhead, "spans": spans,
+        "counter_parity": parity, "pass_under_3pct": overhead < 0.03,
+    }
+    if print_rows:
+        print(f"observability/simulated/off_us,{best['off']:.0f},0")
+        print(f"observability/simulated/on_us,{best['on']:.0f},0")
+        print(f"observability/simulated/wall_delta_pct,0,"
+              f"{100.0 * wall_delta:.3f}")
+        print(f"observability/simulated/overhead_pct,0,"
+              f"{100.0 * overhead:.4f}")
+        print(f"observability/simulated/spans,0,{spans}")
+        print(f"observability/counter_parity,0,{int(parity)}")
+    return [row]
+
+
 def merge_json(path: str, backends_rows: Optional[List[Dict]] = None,
                mqo_rows: Optional[List[Dict]] = None,
-               failover_rows: Optional[List[Dict]] = None) -> None:
+               failover_rows: Optional[List[Dict]] = None,
+               observability_rows: Optional[List[Dict]] = None) -> None:
     """Read-modify-write ``BENCH_caching.json``: replace only the
-    ``backends`` / ``mqo`` / ``failover`` keys, preserving everything
-    ``bench_caching`` (or a previous run) recorded."""
+    ``backends`` / ``mqo`` / ``failover`` / ``observability`` keys,
+    preserving everything ``bench_caching`` (or a previous run)
+    recorded."""
     data: Dict = {}
     if os.path.exists(path):
         with open(path) as fh:
@@ -304,6 +415,8 @@ def merge_json(path: str, backends_rows: Optional[List[Dict]] = None,
         data["mqo"] = mqo_rows
     if failover_rows is not None:
         data["failover"] = failover_rows
+    if observability_rows is not None:
+        data["observability"] = observability_rows
     with open(path, "w") as fh:
         json.dump(data, fh, indent=2, sort_keys=True)
     print(f"wrote {path}")
@@ -320,6 +433,9 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                          "sections")
     ap.add_argument("--skip-fig6", action="store_true",
                     help="run only the executed-join sections")
+    ap.add_argument("--trace", action="store_true",
+                    help="also measure telemetry on-vs-off overhead "
+                         "(merged under the 'observability' key)")
     ap.add_argument("--out", default="BENCH_caching.json",
                     help="JSON path to merge backend/mqo rows into "
                          "('' disables)")
@@ -331,8 +447,12 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                        seed=args.seed + 8)
     failover_rows = run_failover(n_queries=max(args.n_queries, 24),
                                  seed=args.seed + 24)
+    observability_rows = (run_observability(n_queries=max(args.n_queries, 24),
+                                            seed=args.seed + 8)
+                          if args.trace else None)
     if args.out:
-        merge_json(args.out, backends_rows, mqo_rows, failover_rows)
+        merge_json(args.out, backends_rows, mqo_rows, failover_rows,
+                   observability_rows)
 
 
 if __name__ == "__main__":

@@ -20,6 +20,8 @@ import dataclasses
 from typing import (TYPE_CHECKING, Dict, List, Optional, Protocol, Sequence,
                     runtime_checkable)
 
+from repro.obs.metrics import MetricsRegistry
+
 if TYPE_CHECKING:  # planning types only; no runtime import cycle
     from repro.core.cache_state import CacheState
     from repro.core.chunk import ChunkMeta
@@ -157,70 +159,129 @@ class DeviceBindingListener(Protocol):
         ...
 
 
-def workload_summary(executed: Sequence[ExecutedQuery]) -> Dict[str, float]:
+# Summary counter names that only appear when their subsystem engaged
+# (the registry's *emission groups*, reproducing the conditional keys of
+# the legacy hand-rolled summary): counter name -> group. The leftover
+# pending-event merge below uses the same map to surface post-workload
+# events under the right group.
+SUMMARY_GROUPS: Dict[str, str] = {
+    "measured_net_s": "measured", "measured_compute_s": "measured",
+    "measured_ship_bytes": "measured",
+    "block_pairs_total": "block", "block_pairs_evaluated": "block",
+    "prep_s": "prep", "dispatch_s": "prep",
+    "artifact_hits": "prep", "artifact_misses": "prep",
+    "mqo_tasks_total": "mqo", "mqo_tasks_executed": "mqo",
+    "mqo_shared_hits": "mqo",
+    "replica_hits": "replica", "replicas_dropped": "replica",
+    "failover_readmits": "failover",
+    "recovery_bytes_from_replica": "failover",
+    "recovery_bytes_from_raw": "failover", "recovery_s": "failover",
+    "result_cache_hits": "result_cache",
+}
+
+# Ungrouped summary counters, in emission order (before any group).
+_SUMMARY_BASE = (
+    "total_time_s", "scan_time_s", "net_time_s", "compute_time_s",
+    "opt_time_s", "bytes_scanned", "files_scanned", "queries",
+    "reuse_hits", "reuse_bytes_served", "residual_bytes_scanned",
+    "reuse_scan_skips",
+)
+
+
+def register_summary_counters(registry: MetricsRegistry) -> None:
+    """Pre-register every workload-summary counter in emission order
+    (idempotent — get-or-create), so ``as_summary`` key order matches
+    the legacy summary regardless of which query records first."""
+    for name in _SUMMARY_BASE:
+        registry.counter(name)
+    for name, group in SUMMARY_GROUPS.items():
+        registry.counter(name, group=group)
+
+
+def record_executed(registry: MetricsRegistry, e: ExecutedQuery) -> None:
+    """Accumulate one ExecutedQuery into a registry's summary counters.
+
+    Counters are named exactly as the ``workload_summary`` keys and
+    accumulate in the same left-to-right order the legacy summary's
+    ``sum()`` calls did, so registry totals equal summary values bit for
+    bit. Optional subsystems accumulate unconditionally (``None`` -> 0)
+    but their emission group is only marked present when the field is
+    actually set — the registry equivalent of the legacy ``any(field is
+    not None)`` guards."""
+    register_summary_counters(registry)
+    c = registry.counter
+    c("total_time_s").inc(e.time_total_s)
+    c("scan_time_s").inc(e.time_scan_s)
+    c("net_time_s").inc(e.time_net_s)
+    c("compute_time_s").inc(e.time_compute_s)
+    c("opt_time_s").inc(e.time_opt_s)
+    c("bytes_scanned").inc(sum(e.report.scan_bytes_by_node.values()))
+    c("files_scanned").inc(len(e.report.files_scanned))
+    c("queries").inc(1)
+    c("reuse_hits").inc(e.report.reuse_hits)
+    c("reuse_bytes_served").inc(e.report.reuse_bytes_served)
+    c("residual_bytes_scanned").inc(e.report.residual_bytes_scanned)
+    c("reuse_scan_skips").inc(e.report.reuse_scan_skips)
+    c("measured_net_s").inc(e.measured_net_s or 0.0)
+    c("measured_compute_s").inc(e.measured_compute_s or 0.0)
+    c("measured_ship_bytes").inc(e.measured_ship_bytes or 0)
+    c("block_pairs_total").inc(e.block_pairs_total or 0)
+    c("block_pairs_evaluated").inc(e.block_pairs_evaluated or 0)
+    c("prep_s").inc(e.prep_s or 0.0)
+    c("dispatch_s").inc(e.dispatch_s or 0.0)
+    c("artifact_hits").inc(e.artifact_hits or 0)
+    c("artifact_misses").inc(e.artifact_misses or 0)
+    c("mqo_tasks_total").inc(e.mqo_tasks_total or 0)
+    c("mqo_tasks_executed").inc(e.mqo_tasks_executed or 0)
+    c("mqo_shared_hits").inc(e.mqo_shared_hits or 0)
+    c("replica_hits").inc(e.replica_hits or 0)
+    c("replicas_dropped").inc(e.replicas_dropped or 0)
+    c("failover_readmits").inc(e.failover_readmits or 0)
+    c("recovery_bytes_from_replica").inc(e.recovery_bytes_from_replica or 0)
+    c("recovery_bytes_from_raw").inc(e.recovery_bytes_from_raw or 0)
+    c("recovery_s").inc(e.recovery_s or 0.0)
+    hit = bool(getattr(e.report, "result_cache_hit", False))
+    c("result_cache_hits").inc(1 if hit else 0)
+    if e.measured_net_s is not None:
+        registry.mark_group("measured")
+    if e.block_pairs_total is not None:
+        registry.mark_group("block")
+    if e.prep_s is not None:
+        registry.mark_group("prep")
+    if e.mqo_tasks_total is not None:
+        registry.mark_group("mqo")
+    if e.replica_hits is not None:
+        registry.mark_group("replica")
+    if e.failover_readmits is not None:
+        registry.mark_group("failover")
+    if hit:
+        registry.mark_group("result_cache")
+
+
+def workload_summary(executed: Sequence[ExecutedQuery],
+                     coordinator: Optional["CacheCoordinator"] = None
+                     ) -> Dict[str, float]:
     """Aggregate modeled times, scan volume, semantic-reuse counters, and
     (when present) measured backend quantities over an executed workload
-    (the quantities the benchmarks report)."""
-    out = {
-        "total_time_s": sum(e.time_total_s for e in executed),
-        "scan_time_s": sum(e.time_scan_s for e in executed),
-        "net_time_s": sum(e.time_net_s for e in executed),
-        "compute_time_s": sum(e.time_compute_s for e in executed),
-        "opt_time_s": sum(e.time_opt_s for e in executed),
-        "bytes_scanned": float(sum(sum(e.report.scan_bytes_by_node.values())
-                                   for e in executed)),
-        "files_scanned": float(sum(len(e.report.files_scanned)
-                                   for e in executed)),
-        "queries": float(len(executed)),
-        "reuse_hits": float(sum(e.report.reuse_hits for e in executed)),
-        "reuse_bytes_served": float(sum(e.report.reuse_bytes_served
-                                        for e in executed)),
-        "residual_bytes_scanned": float(sum(e.report.residual_bytes_scanned
-                                            for e in executed)),
-        "reuse_scan_skips": float(sum(e.report.reuse_scan_skips
-                                      for e in executed)),
-    }
-    if any(e.measured_net_s is not None for e in executed):
-        out["measured_net_s"] = sum(e.measured_net_s or 0.0
-                                    for e in executed)
-        out["measured_compute_s"] = sum(e.measured_compute_s or 0.0
-                                        for e in executed)
-        out["measured_ship_bytes"] = float(sum(e.measured_ship_bytes or 0
-                                               for e in executed))
-    if any(e.block_pairs_total is not None for e in executed):
-        out["block_pairs_total"] = float(sum(e.block_pairs_total or 0
-                                             for e in executed))
-        out["block_pairs_evaluated"] = float(sum(e.block_pairs_evaluated or 0
-                                                 for e in executed))
-    if any(e.prep_s is not None for e in executed):
-        out["prep_s"] = sum(e.prep_s or 0.0 for e in executed)
-        out["dispatch_s"] = sum(e.dispatch_s or 0.0 for e in executed)
-        out["artifact_hits"] = float(sum(e.artifact_hits or 0
-                                         for e in executed))
-        out["artifact_misses"] = float(sum(e.artifact_misses or 0
-                                           for e in executed))
-    if any(e.mqo_tasks_total is not None for e in executed):
-        out["mqo_tasks_total"] = float(sum(e.mqo_tasks_total or 0
-                                           for e in executed))
-        out["mqo_tasks_executed"] = float(sum(e.mqo_tasks_executed or 0
-                                              for e in executed))
-        out["mqo_shared_hits"] = float(sum(e.mqo_shared_hits or 0
-                                           for e in executed))
-    if any(e.replica_hits is not None for e in executed):
-        out["replica_hits"] = float(sum(e.replica_hits or 0
-                                        for e in executed))
-        out["replicas_dropped"] = float(sum(e.replicas_dropped or 0
-                                            for e in executed))
-    if any(e.failover_readmits is not None for e in executed):
-        out["failover_readmits"] = float(sum(e.failover_readmits or 0
-                                             for e in executed))
-        out["recovery_bytes_from_replica"] = float(sum(
-            e.recovery_bytes_from_replica or 0 for e in executed))
-        out["recovery_bytes_from_raw"] = float(sum(
-            e.recovery_bytes_from_raw or 0 for e in executed))
-        out["recovery_s"] = sum(e.recovery_s or 0.0 for e in executed)
-    if any(getattr(e.report, "result_cache_hit", False) for e in executed):
-        out["result_cache_hits"] = float(sum(
-            1 for e in executed
-            if getattr(e.report, "result_cache_hit", False)))
-    return out
+    (the quantities the benchmarks report).
+
+    Implemented on a fresh :class:`~repro.obs.metrics.MetricsRegistry`
+    via :func:`record_executed` — every counter keeps its legacy name,
+    value, and emission condition. Pass ``coordinator=`` to also surface
+    any replication/failover events still pending in its event channel
+    (events posted after the last executed query would otherwise never
+    drain into an ``ExecutedQuery``); the channel is asserted empty
+    afterwards."""
+    reg = MetricsRegistry()
+    register_summary_counters(reg)
+    for e in executed:
+        record_executed(reg, e)
+    if coordinator is not None:
+        for key, v in coordinator.events.drain().items():
+            group = SUMMARY_GROUPS.get(key)
+            reg.counter(key, group=group).inc(v)
+            if group is not None:
+                reg.mark_group(group)
+        assert coordinator.events.empty(), \
+            "pending-event channel not empty after workload_summary"
+    return reg.as_summary()

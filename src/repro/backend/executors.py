@@ -44,6 +44,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.backend.artifacts import ChunkView, JoinArtifactCache, task_coords
+from repro.obs.trace import NULL_TRACER
 
 JOIN_BACKENDS = ("numpy", "pallas")
 PRUNE_MODES = ("dense", "block", "auto")
@@ -121,13 +122,16 @@ class NumpyJoinExecutor:
         # Block-pair counters are a kernel-path concept; the numpy
         # reference has none (ExecutedQuery fields stay None).
         self.last_stats: Optional[Dict[str, int]] = None
+        # Backends swap in a live tracer at bind time (telemetry on).
+        self.tracer = NULL_TRACER
 
     def count_pairs(self, tasks: Sequence[JoinTask], eps: int) -> List[int]:
         """Per-task match counts via the (overridable) numpy predicate
         (ChunkView task sides are unwrapped to the raw arrays the
         predicate expects)."""
-        return [self.join_fn(task_coords(a), task_coords(b), eps, same)
-                for _, a, b, same in tasks]
+        with self.tracer.span("dispatch", tasks=len(tasks)):
+            return [self.join_fn(task_coords(a), task_coords(b), eps, same)
+                    for _, a, b, same in tasks]
 
 
 class PallasJoinExecutor:
@@ -182,6 +186,10 @@ class PallasJoinExecutor:
                           else JoinArtifactCache())
         self._fn_cache: Dict[tuple, Callable] = {}
         self.last_stats: Optional[Dict[str, int]] = None
+        # Backends swap in a live tracer at bind time (telemetry on);
+        # prep/dispatch spans bracket the host-side batch build and the
+        # kernel-dispatch loop respectively.
+        self.tracer = NULL_TRACER
 
     # ------------------------------------------------ artifact-aware prep
 
@@ -230,11 +238,12 @@ class PallasJoinExecutor:
         wall-clock, and the artifact-cache hit/miss deltas."""
         t0 = time.perf_counter()
         h0, m0 = self.artifacts.hits, self.artifacts.misses
-        if self.prune == "dense":
-            batches, stats = self._batches_dense(tasks, by_node)
-        else:
-            batches, stats = self._batches_block(
-                tasks, eps, by_node, auto=self.prune == "auto")
+        with self.tracer.span("prep", tasks=len(tasks)):
+            if self.prune == "dense":
+                batches, stats = self._batches_dense(tasks, by_node)
+            else:
+                batches, stats = self._batches_block(
+                    tasks, eps, by_node, auto=self.prune == "auto")
         stats["prep_s"] = time.perf_counter() - t0
         stats["artifact_hits"] = self.artifacts.hits - h0
         stats["artifact_misses"] = self.artifacts.misses - m0
@@ -364,10 +373,11 @@ class PallasJoinExecutor:
         counts = [0] * len(tasks)
         batches, stats = self.iter_batches(tasks, eps)
         t0 = time.perf_counter()
-        for batch in batches:
-            got = np.asarray(self.dispatch(batch, eps))
-            for i, c in zip(batch.idxs, got):
-                counts[i] = int(c)
+        with self.tracer.span("dispatch", batches=len(batches)):
+            for batch in batches:
+                got = np.asarray(self.dispatch(batch, eps))
+                for i, c in zip(batch.idxs, got):
+                    counts[i] = int(c)
         stats["dispatch_s"] = time.perf_counter() - t0
         self.last_stats = stats
         return counts

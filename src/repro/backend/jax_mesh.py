@@ -349,17 +349,38 @@ class JaxMeshBackend(SimulatedBackend):
 
     # ----------------------------------------------------------- execution
 
+    def _mirror_device_stats(self) -> None:
+        """Refresh the ``device.*`` registry gauges from the cumulative
+        :attr:`device_stats` counters (telemetry-on callers only)."""
+        reg = self.telemetry.registry
+        for k, v in self.device_stats.items():
+            reg.gauge(f"device.{k}").set(v)
+
     def _ship(self, report: "QueryReport",
               coords_of: Callable[[int], np.ndarray]
               ) -> Tuple[float, int]:
         """Replay the join plan's ship decisions as real cross-device
         transfers; returns (measured seconds, measured bytes). Routes
         whose src and dest land on the same physical device (mesh wrap)
-        move no bytes and are excluded from the byte count."""
+        move no bytes and are excluded from the byte count. Wrapped in a
+        ``ship`` span when telemetry is on."""
         import jax
         import jax.numpy as jnp
         if report.join_plan is None:
             return 0.0, 0
+        with self.telemetry.tracer.span(
+                "ship", routes=len(report.join_plan.transfer_routes)):
+            total_s, total_b = self._ship_routes(report, coords_of)
+        if self.telemetry.enabled:
+            self._mirror_device_stats()
+        return total_s, total_b
+
+    def _ship_routes(self, report: "QueryReport",
+                     coords_of: Callable[[int], np.ndarray]
+                     ) -> Tuple[float, int]:
+        """The transfer-replay loop behind :meth:`_ship`."""
+        import jax
+        import jax.numpy as jnp
         total_s, total_b = 0.0, 0
         n_transfers = 0
         staged: Dict[int, Any] = {}
@@ -420,12 +441,17 @@ class JaxMeshBackend(SimulatedBackend):
         (per-task match counts, measured compute seconds = max over
         nodes — the §4.1 ``max_n`` convention applied to measured
         per-node wall-clock — and the query's counters)."""
+        import contextlib
+
         import jax
         import jax.numpy as jnp
         node_time: Dict[int, float] = {}
         counts = [0] * len(tasks)
         batches, stats = self.executor.iter_batches(tasks, eps,
                                                     by_node=True)
+        telemetry_on = self.telemetry.enabled
+        dispatch_span = self.telemetry.tracer.begin("dispatch",
+                                                    batches=len(batches))
         t0_all = time.perf_counter()
         for batch in batches:
             dev = self.device_for_node(batch.node)
@@ -450,14 +476,24 @@ class JaxMeshBackend(SimulatedBackend):
                         self._pinned_by_chunk.setdefault(
                             kb[0], set()).add(ckey)
                     self._enforce_pinned_cap()
+            # jax.profiler annotation: names this kernel launch in any
+            # captured XLA/Perfetto device profile (telemetry-on only —
+            # the off path stays annotation-free).
+            annot = (jax.profiler.TraceAnnotation(
+                f"simjoin.node{batch.node}") if telemetry_on
+                else contextlib.nullcontext())
             t0 = time.perf_counter()
-            got = self.executor.dispatch(batch, eps, arrays=arrays)
-            got.block_until_ready()
+            with annot:
+                got = self.executor.dispatch(batch, eps, arrays=arrays)
+                got.block_until_ready()
             node_time[batch.node] = (node_time.get(batch.node, 0.0)
                                      + time.perf_counter() - t0)
             for i, c in zip(batch.idxs, np.asarray(got)):
                 counts[i] = int(c)
         stats["dispatch_s"] = time.perf_counter() - t0_all
+        self.telemetry.tracer.end(dispatch_span)
+        if telemetry_on:
+            self._mirror_device_stats()
         return counts, max(node_time.values(), default=0.0), stats
 
     def _count_tasks(self, tasks, eps: int
@@ -517,22 +553,20 @@ class JaxMeshBackend(SimulatedBackend):
         time_compute = (max(work_by_node.values(), default=0)
                         / self.cost.cell_pairs_per_sec)
         t_opt = report.opt_time_chunking_s + report.opt_time_evict_place_s
-        return ExecutedQuery(report=report, time_scan_s=time_scan,
-                             time_net_s=time_net,
-                             time_compute_s=time_compute,
-                             time_opt_s=t_opt, matches=matches,
-                             backend=self.name,
-                             measured_net_s=measured_net,
-                             measured_compute_s=measured_compute,
-                             measured_ship_bytes=measured_bytes,
-                             block_pairs_total=stats.get("block_pairs_total"),
-                             block_pairs_evaluated=stats.get(
-                                 "block_pairs_evaluated"),
-                             prep_s=stats.get("prep_s"),
-                             dispatch_s=stats.get("dispatch_s"),
-                             artifact_hits=stats.get("artifact_hits"),
-                             artifact_misses=stats.get("artifact_misses"),
-                             **self._resilience_fields(report))
+        return self._record(ExecutedQuery(
+            report=report, time_scan_s=time_scan, time_net_s=time_net,
+            time_compute_s=time_compute, time_opt_s=t_opt, matches=matches,
+            backend=self.name,
+            measured_net_s=measured_net,
+            measured_compute_s=measured_compute,
+            measured_ship_bytes=measured_bytes,
+            block_pairs_total=stats.get("block_pairs_total"),
+            block_pairs_evaluated=stats.get("block_pairs_evaluated"),
+            prep_s=stats.get("prep_s"),
+            dispatch_s=stats.get("dispatch_s"),
+            artifact_hits=stats.get("artifact_hits"),
+            artifact_misses=stats.get("artifact_misses"),
+            **self._resilience_fields(report)))
 
 
 def make_backend(backend: str, n_nodes: int,

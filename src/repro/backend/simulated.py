@@ -24,10 +24,11 @@ if TYPE_CHECKING:
                                         SimilarityJoinQuery)
 from repro.backend.artifacts import (ChunkView, JoinArtifactCache,
                                      subset_token)
-from repro.backend.base import ExecutedQuery
+from repro.backend.base import ExecutedQuery, record_executed
 from repro.backend.cost_model import CostModel
 from repro.backend.executors import (JoinTask, count_similar_pairs_np,
                                      make_join_executor)
+from repro.obs.telemetry import NULL_TELEMETRY, Telemetry
 
 # Cross-batch multi-query optimization knob: "off" preserves the seed
 # per-query execution exactly; "on" deduplicates join tasks by sharing
@@ -61,6 +62,9 @@ class SimulatedBackend:
         self.artifacts: Optional[JoinArtifactCache] = getattr(
             self.executor, "artifacts", None)
         self.coordinator: Optional["CacheCoordinator"] = None
+        # Replaced with the coordinator's telemetry bundle at bind time;
+        # the no-op default keeps an unbound backend span/metric-free.
+        self.telemetry: Telemetry = NULL_TELEMETRY
 
     # ------------------------------------------------------------- binding
 
@@ -68,10 +72,24 @@ class SimulatedBackend:
         """Attach to the coordinator whose plans this backend executes,
         registering the join-artifact cache as a residency listener so
         memoized prep artifacts are invalidated in lockstep with
-        eviction and split-remap (they never outlive their chunk)."""
+        eviction and split-remap (they never outlive their chunk). The
+        coordinator's telemetry bundle is adopted here, and its tracer
+        handed to the join executor (prep/dispatch spans)."""
         self.coordinator = coordinator
+        self.telemetry = coordinator.telemetry
+        if self.telemetry.enabled:
+            self.executor.tracer = self.telemetry.tracer
         if self.artifacts is not None:
             coordinator.cache.add_listener(self.artifacts)
+
+    def _record(self, eq: ExecutedQuery) -> ExecutedQuery:
+        """Mirror a freshly built ExecutedQuery into the live metrics
+        registry (every construction site funnels through here, so
+        registry totals equal ``workload_summary`` by construction);
+        a no-op with telemetry off."""
+        if self.telemetry.enabled:
+            record_executed(self.telemetry.registry, eq)
+        return eq
 
     def _queried_coords(self, chunk_id: int, file_id: int,
                         box) -> np.ndarray:
@@ -216,11 +234,11 @@ class SimulatedBackend:
         """The ExecutedQuery of a result-cache hit: the match count is
         served from the coordinator's versioned result tier and nothing
         is scanned, shipped, or joined — every phase time is zero."""
-        return ExecutedQuery(report=report, time_scan_s=0.0, time_net_s=0.0,
-                             time_compute_s=0.0, time_opt_s=0.0,
-                             matches=report.cached_matches,
-                             backend=self.name,
-                             **self._resilience_fields(report))
+        return self._record(ExecutedQuery(
+            report=report, time_scan_s=0.0, time_net_s=0.0,
+            time_compute_s=0.0, time_opt_s=0.0,
+            matches=report.cached_matches, backend=self.name,
+            **self._resilience_fields(report)))
 
     def _measured_ship(self, query: "SimilarityJoinQuery",
                        report: "QueryReport",
@@ -257,19 +275,17 @@ class SimulatedBackend:
 
         t_opt = report.opt_time_chunking_s + report.opt_time_evict_place_s
         stats = stats or {}
-        return ExecutedQuery(report=report, time_scan_s=time_scan,
-                             time_net_s=time_net,
-                             time_compute_s=time_compute,
-                             time_opt_s=t_opt, matches=matches,
-                             backend=self.name,
-                             block_pairs_total=stats.get("block_pairs_total"),
-                             block_pairs_evaluated=stats.get(
-                                 "block_pairs_evaluated"),
-                             prep_s=stats.get("prep_s"),
-                             dispatch_s=stats.get("dispatch_s"),
-                             artifact_hits=stats.get("artifact_hits"),
-                             artifact_misses=stats.get("artifact_misses"),
-                             **self._resilience_fields(report))
+        return self._record(ExecutedQuery(
+            report=report, time_scan_s=time_scan, time_net_s=time_net,
+            time_compute_s=time_compute, time_opt_s=t_opt, matches=matches,
+            backend=self.name,
+            block_pairs_total=stats.get("block_pairs_total"),
+            block_pairs_evaluated=stats.get("block_pairs_evaluated"),
+            prep_s=stats.get("prep_s"),
+            dispatch_s=stats.get("dispatch_s"),
+            artifact_hits=stats.get("artifact_hits"),
+            artifact_misses=stats.get("artifact_misses"),
+            **self._resilience_fields(report)))
 
     # ----------------------------------- cross-batch MQO (execute_batch)
 
@@ -382,7 +398,7 @@ class SimulatedBackend:
                          if measuring else None)
             t_opt = r.opt_time_chunking_s + r.opt_time_evict_place_s
             total, executed, shared = counters[i]
-            out.append(ExecutedQuery(
+            out.append(self._record(ExecutedQuery(
                 report=r, time_scan_s=self.modeled_scan_time(r),
                 time_net_s=self.modeled_net_time(r),
                 time_compute_s=(max(work_by_node.values(), default=0)
@@ -398,5 +414,5 @@ class SimulatedBackend:
                 artifact_misses=stats.get("artifact_misses"),
                 mqo_tasks_total=total, mqo_tasks_executed=executed,
                 mqo_shared_hits=shared,
-                **self._resilience_fields(r)))
+                **self._resilience_fields(r))))
         return out

@@ -26,17 +26,22 @@ import numpy as np
 
 from repro.core.chunk import ChunkMeta, FileMeta
 from repro.core.rtree import EvolvingRTree
+from repro.obs.clock import Clock, MONOTONIC
 
 
 class ChunkManager:
     """R-tree lifecycle, split remapping, and size tables."""
 
     def __init__(self, catalog: "Catalog", reader: "FileReader",
-                 min_cells: int, node_budget_bytes: int):
+                 min_cells: int, node_budget_bytes: int,
+                 clock: Optional[Clock] = None):
         self.catalog = catalog
         self.reader = reader
         self.min_cells = min_cells
         self.node_budget = node_budget_bytes
+        # Injectable time source threaded into every tree's refinement
+        # timing (RefineStats.split_eval_s) — repro.obs satellite.
+        self.clock = clock if clock is not None else MONOTONIC
         self._chunk_counter = 0
         self.trees: Dict[int, EvolvingRTree] = {}
         self.chunk_file: Dict[int, int] = {}       # chunk_id -> file_id
@@ -62,7 +67,7 @@ class ChunkManager:
                             self.node_budget // (4 * meta.cell_bytes))
             tree = EvolvingRTree(meta.file_id, coords, meta.cell_bytes,
                                  self.min_cells, self.next_chunk_id,
-                                 max_cells=max_cells)
+                                 max_cells=max_cells, clock=self.clock)
             self.trees[meta.file_id] = tree
             self.chunk_file[tree.leaves()[0].chunk_id] = meta.file_id
         return tree

@@ -55,6 +55,7 @@ from repro.backend import (BACKENDS, CostModel, ExecutedQuery, JOIN_BACKENDS,
                            count_similar_pairs_np, make_backend,
                            make_join_executor, workload_summary)
 from repro.core.coordinator import CacheCoordinator, SimilarityJoinQuery
+from repro.obs.telemetry import Telemetry
 
 __all__ = ["BACKENDS", "CostModel", "ExecutedQuery", "JOIN_BACKENDS",
            "JoinTask", "NumpyJoinExecutor", "PallasJoinExecutor",
@@ -85,7 +86,8 @@ class RawArrayCluster:
                  result_cache_ttl_s: Optional[float] = None,
                  replication: str = "off",
                  replica_k: int = 2,
-                 replication_threshold: float = 3.0):
+                 replication_threshold: float = 3.0,
+                 telemetry: "str | Telemetry | None" = "off"):
         if join_fn is not None and join_backend != "numpy":
             raise ValueError(
                 "join_fn overrides the join predicate of the numpy "
@@ -106,8 +108,29 @@ class RawArrayCluster:
             result_cache_capacity=result_cache_capacity,
             result_cache_ttl_s=result_cache_ttl_s,
             replication=replication, replica_k=replica_k,
-            replication_threshold=replication_threshold)
+            replication_threshold=replication_threshold,
+            telemetry=telemetry)
         self.backend.bind(self.coordinator)
+
+    @property
+    def telemetry(self) -> Telemetry:
+        """The shared telemetry bundle (``"off"`` default = the no-op
+        tracer/registry; pass ``telemetry="on"`` or a ``Telemetry``
+        instance to record spans and metrics)."""
+        return self.coordinator.telemetry
+
+    def export_trace(self, path: str) -> str:
+        """Write the recorded spans as Chrome trace-event JSON to
+        ``path`` (Perfetto/``chrome://tracing``-loadable); returns
+        ``path``. An off-mode cluster writes an empty—but well-formed—
+        trace."""
+        return self.telemetry.export_trace(path)
+
+    def summary(self, executed: Sequence[ExecutedQuery]):
+        """``workload_summary`` over ``executed``, also surfacing any
+        replication/failover events still pending in the coordinator's
+        event channel (e.g. a ``fail_node`` after the last query)."""
+        return workload_summary(executed, coordinator=self.coordinator)
 
     # -------------------------------------------------- failure injection
 
@@ -146,10 +169,12 @@ class RawArrayCluster:
     def run_query(self, query: SimilarityJoinQuery) -> ExecutedQuery:
         """Admit one query through the coordinator and execute its plan
         (a result-cache hit report short-circuits execution; a planned
-        query's computed match count is written back to the tier)."""
-        report = self.coordinator.process_query(query)
-        executed = self.backend.execute(query, report)
-        self.coordinator.record_result(query, executed)
+        query's computed match count is written back to the tier).
+        Traced as one ``query`` span when telemetry is on."""
+        with self.telemetry.tracer.span("query", cat="query"):
+            report = self.coordinator.process_query(query)
+            executed = self.backend.execute(query, report)
+            self.coordinator.record_result(query, executed)
         return executed
 
     def run_workload(self, queries: Sequence[SimilarityJoinQuery],
@@ -160,15 +185,23 @@ class RawArrayCluster:
         eviction/placement round per batch) and the backend's
         ``execute_batch`` (cross-batch join-task dedup under the ``mqo``
         knob); ``None``/1 preserves the per-query admission of the
-        paper's experiments."""
-        if batch_size is None or batch_size <= 1:
-            return [self.run_query(q) for q in queries]
-        out: List[ExecutedQuery] = []
-        for i in range(0, len(queries), batch_size):
-            batch = list(queries[i:i + batch_size])
-            reports = self.coordinator.process_batch(batch)
-            executed = self.backend.execute_batch(batch, reports)
-            for q, e in zip(batch, executed):
-                self.coordinator.record_result(q, e)
-            out.extend(executed)
-        return out
+        paper's experiments. Traced as a root ``workload`` span whose
+        direct children (``query`` / ``batch`` spans) tile the run."""
+        tracer = self.telemetry.tracer
+        root = tracer.begin("workload", cat="workload",
+                            queries=len(queries))
+        try:
+            if batch_size is None or batch_size <= 1:
+                return [self.run_query(q) for q in queries]
+            out: List[ExecutedQuery] = []
+            for i in range(0, len(queries), batch_size):
+                batch = list(queries[i:i + batch_size])
+                with tracer.span("batch", cat="query", size=len(batch)):
+                    reports = self.coordinator.process_batch(batch)
+                    executed = self.backend.execute_batch(batch, reports)
+                    for q, e in zip(batch, executed):
+                        self.coordinator.record_result(q, e)
+                out.extend(executed)
+            return out
+        finally:
+            tracer.end(root)

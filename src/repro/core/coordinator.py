@@ -24,8 +24,8 @@ Policy combos (see ``repro.core.policies``): ``cost``, ``chunk_lru``,
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Set
+from typing import (TYPE_CHECKING, Callable, Dict, List, Optional, Sequence,
+                    Set, Union)
 
 if TYPE_CHECKING:  # duck-typed at runtime to avoid a package cycle
     from repro.arrayio.catalog import Catalog, FileReader
@@ -44,6 +44,8 @@ from repro.core.policies import (EvictionContext, PlacementContext, POLICIES,
 from repro.core.result_cache import (RESULT_CACHE_MODES, ResultCache,
                                      ResultEntry)
 from repro.core.rtree import RefineStats
+from repro.obs.clock import Clock, as_clock
+from repro.obs.telemetry import EventChannel, Telemetry, make_telemetry
 
 __all__ = ["POLICIES", "REPLICATION_MODES", "REUSE_MODES",
            "RESULT_CACHE_MODES", "SimilarityJoinQuery", "QueryReport",
@@ -155,7 +157,9 @@ class CacheCoordinator:
                  result_cache_capacity: int = 256,
                  result_cache_ttl_s: Optional[float] = None,
                  replication: str = "off", replica_k: int = 2,
-                 replication_threshold: float = 3.0):
+                 replication_threshold: float = 3.0,
+                 telemetry: Union[str, Telemetry, None] = None,
+                 clock: Union[Clock, Callable[[], float], None] = None):
         if reuse not in REUSE_MODES:
             raise ValueError(f"unknown reuse mode {reuse!r}; "
                              f"expected one of {REUSE_MODES}")
@@ -175,9 +179,15 @@ class CacheCoordinator:
         self.decay = decay
         self.history_window = history_window
         self.reuse = reuse
+        # Telemetry bundle (off = shared no-op tracer/registry, seed
+        # parity) and the ONE clock every planning-side timing reads —
+        # override ``clock`` to make phase timings deterministic.
+        self.telemetry = make_telemetry(telemetry)
+        self.clock = (as_clock(clock) if clock is not None
+                      else self.telemetry.clock)
 
         self.chunks = ChunkManager(catalog, reader, min_cells,
-                                   node_budget_bytes)
+                                   node_budget_bytes, clock=self.clock)
         self.cache = CacheState(n_nodes, node_budget_bytes, budget_scope)
         self.eviction = build_eviction(self.spec, self.cache.total_budget,
                                        decay, history_window)
@@ -194,8 +204,10 @@ class CacheCoordinator:
         self.access_freq: Dict[int, float] = {}
         # Counters the execution backend attaches to the next
         # ExecutedQuery it builds (drained once — see
-        # :meth:`drain_exec_counters`).
-        self._pending_exec: Dict[str, float] = {}
+        # :meth:`drain_exec_counters`); ``workload_summary`` surfaces
+        # anything still pending after the last query, so post-workload
+        # events are never silently lost.
+        self.events = EventChannel(self.telemetry.registry)
         self.join_history: List[JoinRecord] = []   # Alg. 3 workload W
         self.query_counter = 0
         # Queries that went through the planning pipeline (a result-cache
@@ -208,7 +220,8 @@ class CacheCoordinator:
         self.result_cache: Optional[ResultCache] = None
         if result_cache == "on":
             self.result_cache = ResultCache(capacity=result_cache_capacity,
-                                            ttl_s=result_cache_ttl_s)
+                                            ttl_s=result_cache_ttl_s,
+                                            clock=self.clock)
             self.cache.add_listener(self.result_cache)
         # Cumulative semantic-reuse counters (bench_caching surfaces them).
         self.stats: Dict[str, float] = {
@@ -223,6 +236,9 @@ class CacheCoordinator:
             "recovery_bytes_from_replica": 0, "recovery_bytes_from_raw": 0,
             "recovery_s": 0.0,
         }
+        # Resident-set snapshot the cache-health instrumentation diffs
+        # against (residency churn per policy round; telemetry-on only).
+        self._prev_resident: Set[int] = set()
 
     # ------------------------------------------------- legacy-shaped views
 
@@ -315,7 +331,8 @@ class CacheCoordinator:
                 plans.append(self._plan_chunked_query(
                     q, self.query_counter, batch_scanned))
 
-        t0 = time.perf_counter()
+        tracer = self.telemetry.tracer
+        t0 = self.clock.now()
         chunk_bytes, file_bytes = self.chunks.size_tables()
         # An early query's chunk may have been split by a later query in
         # the same batch: remap every access onto the present leaf set
@@ -334,21 +351,25 @@ class CacheCoordinator:
         if self.spec.granularity == "chunk":
             # File units admit online during the scan loop; chunk units
             # admit here, in one Alg.-2/LRU/LFU round over the batch.
-            deferred_evicted = self.eviction.finalize_batch(EvictionContext(
-                accesses=accesses, chunk_bytes=chunk_bytes,
-                file_bytes=file_bytes, state=self.cache, chunks=self.chunks))
+            with tracer.span("policy.evict", queries=len(plans)):
+                deferred_evicted = self.eviction.finalize_batch(
+                    EvictionContext(
+                        accesses=accesses, chunk_bytes=chunk_bytes,
+                        file_bytes=file_bytes, state=self.cache,
+                        chunks=self.chunks))
 
         replicas: Dict[int, Set[int]] = {}
         for p in plans:
             for cid, nodes in p.join_plan.replicas.items():
                 replicas.setdefault(cid, set()).update(nodes)
-        placement, extra_bytes = self.placement.place(PlacementContext(
-            replicas=replicas,
-            queried=[cm for acc in accesses for cm in acc.queried],
-            join_history=self.join_history, chunk_bytes=chunk_bytes,
-            node_budgets=self.cache.placement_budgets(), state=self.cache,
-            home_of=self.chunks.home_node, decay=self.decay,
-            history_window=self.history_window))
+        with tracer.span("policy.place", queries=len(plans)):
+            placement, extra_bytes = self.placement.place(PlacementContext(
+                replicas=replicas,
+                queried=[cm for acc in accesses for cm in acc.queried],
+                join_history=self.join_history, chunk_bytes=chunk_bytes,
+                node_budgets=self.cache.placement_budgets(),
+                state=self.cache, home_of=self.chunks.home_node,
+                decay=self.decay, history_window=self.history_window))
         if placement is not None:
             # Keep the eviction policy's residency view in sync with
             # placement drops (no-op for cost: triples re-enter as
@@ -362,23 +383,23 @@ class CacheCoordinator:
             # eviction/placement rounds left free. Runs strictly after
             # them so residency and primaries are already final — which
             # is what makes secondaries cheaper to drop than sole copies.
-            for cid in list(self.access_freq):
-                self.access_freq[cid] *= self.REPLICA_FREQ_DECAY
-                if self.access_freq[cid] < 1e-3:
-                    del self.access_freq[cid]
-            for acc in accesses:
-                for cm in acc.queried:
-                    self.access_freq[cm.chunk_id] = \
-                        self.access_freq.get(cm.chunk_id, 0.0) + 1.0
-            shed = self.replicator.replicate(ReplicationContext(
-                state=self.cache, chunk_bytes=chunk_bytes,
-                freq=self.access_freq, home_of=self.chunks.home_node))
+            with tracer.span("policy.replicate", queries=len(plans)):
+                for cid in list(self.access_freq):
+                    self.access_freq[cid] *= self.REPLICA_FREQ_DECAY
+                    if self.access_freq[cid] < 1e-3:
+                        del self.access_freq[cid]
+                for acc in accesses:
+                    for cm in acc.queried:
+                        self.access_freq[cm.chunk_id] = \
+                            self.access_freq.get(cm.chunk_id, 0.0) + 1.0
+                shed = self.replicator.replicate(ReplicationContext(
+                    state=self.cache, chunk_bytes=chunk_bytes,
+                    freq=self.access_freq, home_of=self.chunks.home_node))
             self.stats["replicas_dropped"] += shed
-            self._pending_exec["replicas_dropped"] = \
-                self._pending_exec.get("replicas_dropped", 0) + shed
+            self.events.post("replicas_dropped", shed)
             for p in plans:
                 self.stats["replica_hits"] += p.join_plan.replica_hits
-        t_evict_place = time.perf_counter() - t0
+        t_evict_place = self.clock.now() - t0
 
         # Policy rounds reassign the resident set wholesale; reconcile any
         # device-backed buffer bindings (no-op without a device backend).
@@ -396,6 +417,9 @@ class CacheCoordinator:
                 self.stats["reuse_scan_skips"] += p.reuse_scan_skips
                 if p.rewrite is not None and p.rewrite.fully_covered:
                     self.stats["reuse_fully_covered_queries"] += 1
+
+        if self.telemetry.enabled:
+            self._record_cache_health(chunk_bytes)
 
         cached_bytes = self.cache.cached_bytes(chunk_bytes)
         cached_chunks = len(self.cache.cached)
@@ -430,6 +454,31 @@ class CacheCoordinator:
                 reuse_fully_covered=(p.rewrite is not None
                                      and p.rewrite.fully_covered)))
         return out
+
+    # -------------------------------------------- cache-health telemetry
+
+    def _record_cache_health(self, chunk_bytes: Dict[int, int]) -> None:
+        """Refresh the registry's cache-health instruments after a policy
+        round (telemetry-on only): per-node budget utilization gauges,
+        the replica-skew gauge (max/mean of cached bytes per node; 1.0 =
+        perfectly balanced, 0 = empty cache), a residency-churn histogram
+        (symmetric difference of the resident set vs the previous
+        round), and ``coord.*`` gauge mirrors of :attr:`stats`."""
+        reg = self.telemetry.registry
+        used = self.cache.bytes_by_node(chunk_bytes)
+        budget = max(self.cache.node_budget, 1)
+        vals = [used.get(n, 0) for n in range(self.n_nodes)]
+        for node, b in enumerate(vals):
+            reg.gauge("cache.budget_utilization", node=node).set(b / budget)
+        mean = sum(vals) / max(len(vals), 1)
+        reg.gauge("cache.replica_skew").set(max(vals) / mean if mean > 0
+                                            else 0.0)
+        resident = set(self.cache.cached)
+        reg.histogram("cache.residency_churn").observe(
+            len(resident ^ self._prev_resident))
+        self._prev_resident = resident
+        for k, v in self.stats.items():
+            reg.gauge(f"coord.{k}").set(v)
 
     # ------------------------------------------------ result-cache tier
 
@@ -478,9 +527,10 @@ class CacheCoordinator:
         """Hand the pending replication/failover counters to the
         execution backend (drained once — the first ``ExecutedQuery``
         built after the event carries them; see
-        ``repro.backend.base.ExecutedQuery``)."""
-        out, self._pending_exec = self._pending_exec, {}
-        return out
+        ``repro.backend.base.ExecutedQuery``). Events posted after the
+        last query stay in :attr:`events` until ``workload_summary``
+        surfaces them."""
+        return self.events.drain()
 
     def _fits_at(self, node: int, nbytes: int,
                  chunk_bytes: Dict[int, int]) -> bool:
@@ -518,7 +568,8 @@ class CacheCoordinator:
         ``ExecutedQuery`` via :meth:`drain_exec_counters`."""
         if not 0 <= node < self.n_nodes:
             raise ValueError(f"node {node} outside 0..{self.n_nodes - 1}")
-        t0 = time.perf_counter()
+        recover_span = self.telemetry.tracer.begin("recover", node=node)
+        t0 = self.clock.now()
         chunk_bytes, _ = self.chunks.size_tables()
         readmits = 0
         from_replica = 0
@@ -555,12 +606,13 @@ class CacheCoordinator:
             "failover_readmits": float(readmits),
             "recovery_bytes_from_replica": float(from_replica),
             "recovery_bytes_from_raw": float(from_raw),
-            "recovery_s": time.perf_counter() - t0,
+            "recovery_s": self.clock.now() - t0,
         }
+        self.telemetry.tracer.end(recover_span)
         self.stats["node_failures"] += 1
         for k, v in event.items():
             self.stats[k] += v
-            self._pending_exec[k] = self._pending_exec.get(k, 0.0) + v
+            self.events.post(k, v)
         return event
 
     # ---- per-query planning: chunk granularity (cost, chunk_lru, ...) ----
@@ -570,11 +622,14 @@ class CacheCoordinator:
         """Plan one chunk-granularity query: semantic-reuse rewrite (when
         enabled), Alg.-1 refinement, scan accounting, and join planning."""
         reuse_on = self.reuse == "on"
+        tracer = self.telemetry.tracer
         # Semantic rewrite, BEFORE the scan plan is built: covered slices
         # (cached chunks overlapping the query, sliced to it) plus the
         # residual region left after subtracting their boxes.
-        rewrite = (self.cache.coverage.rewrite(query.box)
-                   if reuse_on else None)
+        rewrite: Optional[QueryRewrite] = None
+        if reuse_on:
+            with tracer.span("query.rewrite", query=l):
+                rewrite = self.cache.coverage.rewrite(query.box)
         candidates = self.catalog.files_overlapping(query.box)
         scans: List[int] = []
         scan_bytes: Dict[int, int] = {}
@@ -586,8 +641,10 @@ class CacheCoordinator:
         reuse_hits = 0
         reuse_bytes = 0
         scan_skips = 0
-        t0 = time.perf_counter()
+        t0 = self.clock.now()
         rstats = RefineStats()
+        scan_span = tracer.begin("plan.scan", query=l,
+                                 files=len(candidates))
         for meta in candidates:
             first_touch = meta.file_id not in self.chunks.trees
             tree = self.chunks.tree(meta)
@@ -640,7 +697,8 @@ class CacheCoordinator:
                     if sliced > 0:
                         reuse_hits += 1
                         reuse_bytes += sliced
-        t_chunking = time.perf_counter() - t0
+        tracer.end(scan_span)
+        t_chunking = self.clock.now() - t0
 
         # Locations at query start: the cached replica set (a one-tuple
         # in the single-copy default), else the home node (the scan just
@@ -678,8 +736,11 @@ class CacheCoordinator:
         scans are never skipped here — whole-file units carry no finer
         extent metadata to run the containment test against."""
         reuse_on = self.reuse == "on"
-        rewrite = (self.cache.coverage.rewrite(query.box)
-                   if reuse_on else None)
+        tracer = self.telemetry.tracer
+        rewrite: Optional[QueryRewrite] = None
+        if reuse_on:
+            with tracer.span("query.rewrite", query=l):
+                rewrite = self.cache.coverage.rewrite(query.box)
         candidates = self.catalog.files_overlapping(query.box)
         scans: List[int] = []
         scan_bytes: Dict[int, int] = {}
@@ -690,6 +751,8 @@ class CacheCoordinator:
         evicted = 0
         reuse_hits = 0
         reuse_bytes = 0
+        scan_span = tracer.begin("plan.scan", query=l,
+                                 files=len(candidates))
         for meta in candidates:
             unit = self.chunks.file_unit(meta)
             resident = self.eviction.is_resident(unit.chunk_id)
@@ -710,6 +773,7 @@ class CacheCoordinator:
                 if sliced > 0:       # a 0-cell slice reuses nothing
                     reuse_hits += 1
                     reuse_bytes += sliced
+        tracer.end(scan_span)
         locations = {cm.chunk_id: self.catalog.by_id(cm.file_id).node
                      for cm in queried}
         jplan = plan_join(queried, locations, query.eps, self.n_nodes,

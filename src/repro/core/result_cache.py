@@ -34,9 +34,10 @@ injectable for deterministic TTL tests.
 from __future__ import annotations
 
 import dataclasses
-import time
 from collections import OrderedDict
-from typing import TYPE_CHECKING, Callable, List, Optional, Tuple
+from typing import TYPE_CHECKING, Callable, List, Optional, Tuple, Union
+
+from repro.obs.clock import Clock, as_clock
 
 if TYPE_CHECKING:  # geometry/type-only imports; no runtime cycle
     from repro.core.cache_state import CacheState
@@ -77,13 +78,16 @@ class ResultCache:
     """
 
     def __init__(self, capacity: int = 256, ttl_s: Optional[float] = None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Union[Clock, Callable[[], float], None] = None):
         if capacity <= 0:
             raise ValueError(f"result-cache capacity must be positive, "
                              f"got {capacity}")
         self.capacity = capacity
         self.ttl_s = ttl_s
-        self._clock = clock
+        # Accepts a repro.obs Clock or a bare () -> float callable (the
+        # seed-era signature); None falls back to the shared monotonic
+        # clock. This removed the module's direct time.monotonic call.
+        self._clock = as_clock(clock).now
         self._entries: "OrderedDict[ResultKey, ResultEntry]" = OrderedDict()
         # Residency version stamp + the snapshot reconcile diffs against.
         self.version = 0

@@ -21,10 +21,11 @@ per query terminates after at most 2d levels.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
+
+from repro.obs.clock import Clock, MONOTONIC
 
 from repro.core.chunk import Chunk
 from repro.core.geometry import Box, bounding_box, points_in_box, split_boundaries
@@ -58,12 +59,15 @@ class EvolvingRTree:
 
     def __init__(self, file_id: int, coords: np.ndarray, cell_bytes: int,
                  min_cells: int, next_chunk_id: Callable[[], int],
-                 max_cells: Optional[int] = None):
+                 max_cells: Optional[int] = None,
+                 clock: Optional[Clock] = None):
         """``max_cells`` (extension, DESIGN.md §7): chunks larger than this
         split at the median of their longest box side even when no query
         face bisects them (a fully-inside chunk otherwise never splits and
         can exceed one node's cache budget, making it un-placeable).
-        ``None`` keeps Alg. 1 verbatim."""
+        ``None`` keeps Alg. 1 verbatim. ``clock`` is the injectable time
+        source behind ``RefineStats.split_eval_s`` (default: the shared
+        monotonic clock)."""
         if coords.ndim != 2:
             raise ValueError(f"coords must be (n, d), got {coords.shape}")
         self.file_id = file_id
@@ -71,6 +75,7 @@ class EvolvingRTree:
         self.cell_bytes = cell_bytes
         self.min_cells = min_cells
         self.max_cells = max_cells
+        self.clock = clock if clock is not None else MONOTONIC
         self._next_id = next_chunk_id
         box = bounding_box(coords)
         if box is None:
@@ -205,7 +210,7 @@ class EvolvingRTree:
         candidates = split_boundaries(query, chunk.box)
         if not candidates:
             return None
-        t0 = time.perf_counter()
+        t0 = self.clock.now()
         dims = np.fromiter((d for d, _ in candidates), dtype=np.int64)
         cuts = np.fromiter((c for _, c in candidates), dtype=np.int64)
         lo_masks = pts[:, dims] <= cuts                        # (n, K)
@@ -247,7 +252,7 @@ class EvolvingRTree:
                   if n_lo[best_k] < n else None)
         if st is not None:
             st.split_candidates += len(candidates)
-            st.split_eval_s += time.perf_counter() - t0
+            st.split_eval_s += self.clock.now() - t0
         # A degenerate cut (all cells on one side -> one box None) still
         # makes progress: the surviving child's box is strictly tighter
         # (the cut bisected the parent box, carving off empty margin).

@@ -361,3 +361,32 @@ def test_simjoin_property_random(seed, n, m, eps):
                                       eps, False))
     want = int(count_pairs_ref(jnp.asarray(a), jnp.asarray(b), eps, False))
     assert got == want
+
+
+# ------------------------------------------------------ telemetry (obs)
+
+@given(st.lists(st.floats(min_value=-1e9, max_value=1e9,
+                          allow_nan=False, allow_infinity=False),
+                max_size=200),
+       st.lists(st.floats(min_value=0, max_value=1e6,
+                          allow_nan=False, allow_infinity=False),
+                min_size=1, max_size=12, unique=True))
+@settings(max_examples=60, deadline=None)
+def test_histogram_bucket_counts_sum_to_observation_count(values, bounds):
+    from repro.obs import Histogram
+    h = Histogram("prop", bounds=tuple(sorted(bounds)))
+    for v in values:
+        h.observe(v)
+    assert sum(h.bucket_counts) == h.count == len(values)
+    assert len(h.bucket_counts) == len(h.bounds) + 1
+    # every observation landed in exactly the first bucket whose upper
+    # bound admits it
+    recomputed = [0] * (len(h.bounds) + 1)
+    for v in values:
+        for i, b in enumerate(h.bounds):
+            if v <= b:
+                recomputed[i] += 1
+                break
+        else:
+            recomputed[-1] += 1
+    assert recomputed == h.bucket_counts

@@ -1,0 +1,129 @@
+#!/usr/bin/env python
+"""CI smoke gate for the unified telemetry layer (ISSUE 8 satellite).
+
+Runs a seeded Zipf workload through a batched cluster with
+``telemetry="on"`` (reuse + MQO + result cache + hot replication all
+engaged so every counter family records) and fails unless
+
+  * the exported ``.trace.json`` is well-formed Chrome trace-event JSON
+    (a ``traceEvents`` list of ``ph="X"`` spans with ``ts``/``dur``) —
+    catches an exporter that Perfetto/``chrome://tracing`` would reject;
+  * the root ``workload`` span's direct children cover >90% of its
+    wall-clock — catches planner/backend phases silently escaping the
+    span stack (orphaned parents, begin without end);
+  * the live registry's ``as_summary()`` is key-for-key, value-for-value
+    equal to ``workload_summary(executed)`` — catches an execution path
+    that constructs an ``ExecutedQuery`` without recording it, or a
+    registry aggregation that drifts from the legacy fold.
+
+Usage (both CI tier-1 jobs run exactly this; the mesh job passes
+``--backend jax_mesh``):
+
+    PYTHONPATH=src python tools/smoke_trace.py [--backend jax_mesh]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+
+def main(argv=None) -> int:
+    """Run the smoke workload; returns a process exit code."""
+    from repro.arrayio.catalog import FileReader, build_catalog
+    from repro.arrayio.generator import make_geo_files
+    from repro.core.cluster import RawArrayCluster, workload_summary
+    from repro.core.workload import zipf_workload
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--backend", default="simulated",
+                    choices=("simulated", "jax_mesh"))
+    args = ap.parse_args(argv)
+
+    files = make_geo_files(n_files=3, n_seeds=120, clones_per_seed=20,
+                           seed=5)
+    catalog, data = build_catalog(files,
+                                  tempfile.mkdtemp(prefix="smoke_trace_"),
+                                  "csv", n_nodes=4)
+    budget = sum(f.n_cells * f.cell_bytes for f in catalog.files)
+    reader = FileReader(catalog, data)
+    queries = zipf_workload(catalog.domain, n_queries=24, n_templates=6,
+                            s=1.1, eps=300, field_frac=0.4, seed=7)
+
+    cluster = RawArrayCluster(catalog, reader, 4, budget // 4,
+                              policy="cost", min_cells=512,
+                              join_backend="pallas",
+                              backend=args.backend,
+                              reuse="on", mqo="on", result_cache="on",
+                              replication="hot", telemetry="on")
+    executed = cluster.run_workload(queries, batch_size=8)
+
+    # -- 1. Chrome trace-event JSON shape ------------------------------
+    trace_path = os.path.join(tempfile.mkdtemp(prefix="smoke_trace_out_"),
+                              "workload.trace.json")
+    cluster.export_trace(trace_path)
+    with open(trace_path) as fh:
+        doc = json.load(fh)
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        print("FAIL: exported trace has no traceEvents list",
+              file=sys.stderr)
+        return 1
+    complete = [e for e in events if e.get("ph") == "X"]
+    bad = [e for e in complete
+           if not (isinstance(e.get("ts"), (int, float))
+                   and isinstance(e.get("dur"), (int, float))
+                   and e.get("dur") >= 0 and e.get("name"))]
+    if not complete or bad:
+        print(f"FAIL: malformed complete events in trace: {bad[:3]}",
+              file=sys.stderr)
+        return 1
+
+    # -- 2. Root-span coverage -----------------------------------------
+    spans = cluster.telemetry.tracer.spans
+    roots = [s for s in spans if s.parent_id is None]
+    if len(roots) != 1 or roots[0].name != "workload":
+        print(f"FAIL: expected one root 'workload' span, got "
+              f"{[(s.name, s.parent_id) for s in roots]}", file=sys.stderr)
+        return 1
+    root = roots[0]
+    children = [s for s in spans if s.parent_id == root.span_id]
+    coverage = (sum(c.duration_s for c in children) / root.duration_s
+                if root.duration_s else 0.0)
+    print(f"spans={len(spans)} trace_events={len(events)} "
+          f"root_duration_s={root.duration_s:.4f} coverage={coverage:.4f}")
+    if coverage <= 0.90:
+        print(f"FAIL: direct children of the workload span cover only "
+              f"{coverage:.1%} of its wall-clock (phases escaping the "
+              f"span stack?)", file=sys.stderr)
+        return 1
+
+    # -- 3. Live registry == workload_summary --------------------------
+    legacy = workload_summary(executed)
+    live = cluster.telemetry.registry.as_summary()
+    missing = [k for k in legacy if k not in live]
+    drift = {k: (legacy[k], live[k]) for k in legacy
+             if k in live and live[k] != legacy[k]}
+    extra = [k for k in live if k not in legacy]
+    if missing or drift or extra:
+        print(f"FAIL: registry/summary divergence — missing={missing} "
+              f"drift={drift} extra={extra}", file=sys.stderr)
+        return 1
+    engaged = [k for k in ("reuse_hits", "mqo_shared_hits",
+                           "result_cache_hits", "replica_hits")
+               if legacy.get(k, 0) > 0]
+    print(f"summary keys={len(legacy)} engaged_counters={engaged}")
+    if len(engaged) < 3:
+        print(f"FAIL: mixed workload did not engage enough counter "
+              f"families (got {engaged}) — smoke lost its teeth",
+              file=sys.stderr)
+        return 1
+    print("OK: valid Chrome trace, >90% span coverage, registry totals "
+          "match workload_summary")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
