@@ -5,9 +5,11 @@ work done: cell-pairs, attention FLOPs, pages touched, block pairs).
 The simjoin section records the kernel perf trajectory: dense vs
 block-sparse (eps-pruned, ``PrefetchScalarGridSpec``) simjoin on
 clustered inputs, plus the clustered GEO workload executed end-to-end
-under prune=dense/block/auto and both execution backends — match-count
-parity, the ``block_pairs_evaluated / block_pairs_total`` pruning
-counters, and (``run_artifact_amortization``) cold-vs-warm rows for the
+under prune=dense/block/bitmap/auto on both execution backends —
+match-count parity, the ``block_pairs_evaluated / block_pairs_total``
+pruning counters, the cell-exact bitmap stage's
+``block_pairs_bitmap_killed``/``bitmap_build_s``, and
+(``run_artifact_amortization``) cold-vs-warm rows for the
 join-artifact cache: hit rates, the prep/dispatch wall-clock split, and
 the warm prep speedup on a repeated workload.
 ``run(out_json=...)`` (the module main writes ``BENCH_kernels.json``)
@@ -114,18 +116,20 @@ def _geo_cluster(catalog, reader, n_nodes, backend, prune, budget_frac=8):
 
 def run_geo_workload_pruning(print_rows: bool = True):
     """The clustered GEO workload executed end-to-end (joins for real)
-    under prune=dense/block/auto on the simulated backend, and
-    prune=block/auto on the jax device mesh: identical match counts,
-    the per-run block-pair counters, and the host-side prep/dispatch
-    wall-clock split from ``workload_summary`` — the numbers the
+    under prune=dense/block/bitmap/auto on both the simulated backend
+    and the jax device mesh: identical match counts, the per-run
+    block-pair counters (including the cell-exact bitmap stage's
+    killed-pair counter and build wall-clock), and the host-side
+    prep/dispatch split from ``workload_summary`` — the numbers the
     ``prune="auto"`` default is judged by (auto must not do more grid
-    work than the better of dense and block)."""
+    work than the best of dense, block, and bitmap)."""
     from repro.core.cluster import workload_summary
     catalog, reader, queries, n_nodes = _geo_dataset()
     out = {}
     for backend, prune in (("simulated", "dense"), ("simulated", "block"),
-                           ("simulated", "auto"), ("jax_mesh", "block"),
-                           ("jax_mesh", "auto")):
+                           ("simulated", "bitmap"), ("simulated", "auto"),
+                           ("jax_mesh", "dense"), ("jax_mesh", "block"),
+                           ("jax_mesh", "bitmap"), ("jax_mesh", "auto")):
         cluster = _geo_cluster(catalog, reader, n_nodes, backend, prune)
         t0 = time.perf_counter()
         executed = cluster.run_workload(queries)
@@ -140,6 +144,10 @@ def run_geo_workload_pruning(print_rows: bool = True):
             "prep_s": summ.get("prep_s", 0.0),
             "dispatch_s": summ.get("dispatch_s", 0.0),
         }
+        if "block_pairs_bitmap_killed" in summ:
+            out[label]["block_pairs_bitmap_killed"] = \
+                summ["block_pairs_bitmap_killed"]
+            out[label]["bitmap_build_s"] = summ.get("bitmap_build_s", 0.0)
         if print_rows:
             print(f"geo_join/{label},{wall_us:.0f},"
                   f"{out[label]['matches']}")
@@ -147,9 +155,12 @@ def run_geo_workload_pruning(print_rows: bool = True):
                   f"{out[label]['block_pairs_evaluated']:.0f}/"
                   f"{out[label]['block_pairs_total']:.0f}")
     base = out["simulated_dense"]["matches"]
-    parity = all(v["matches"] == base for v in out.values())
+    parity = all(v["matches"] == base for v in out.values()
+                 if isinstance(v, dict))
     frac = (out["simulated_block"]["block_pairs_evaluated"]
             / max(out["simulated_block"]["block_pairs_total"], 1.0))
+    bitmap_frac = (out["simulated_bitmap"]["block_pairs_evaluated"]
+                   / max(out["simulated_bitmap"]["block_pairs_total"], 1.0))
     # The adaptive default's acceptance, compared in like units:
     # auto <= dense holds in the evaluated counter directly (a dense-
     # routed task counts its full grid, a block-routed one its live
@@ -162,14 +173,19 @@ def run_geo_workload_pruning(print_rows: bool = True):
     auto_work = out["simulated_auto"]["block_pairs_evaluated"]
     dense_work = out["simulated_dense"]["block_pairs_evaluated"]
     block_work = out["simulated_block"]["block_pairs_evaluated"]
+    bitmap_work = out["simulated_bitmap"]["block_pairs_evaluated"]
     if print_rows:
         print(f"geo_join/match_parity,0,{int(parity)}")
         print(f"geo_join/pruned_fraction,0,{frac:.3f}")
-        print(f"geo_join/auto_work_vs_dense_vs_block,0,"
-              f"{auto_work:.0f}/{dense_work:.0f}/{block_work:.0f}")
+        print(f"geo_join/bitmap_pruned_fraction,0,{bitmap_frac:.3f}")
+        print(f"geo_join/auto_work_vs_dense_vs_block_vs_bitmap,0,"
+              f"{auto_work:.0f}/{dense_work:.0f}/{block_work:.0f}/"
+              f"{bitmap_work:.0f}")
     out["match_parity"] = parity
     out["pruned_fraction"] = frac
+    out["bitmap_pruned_fraction"] = bitmap_frac
     out["auto_work_le_dense"] = bool(auto_work <= dense_work)
+    out["bitmap_work_le_block"] = bool(bitmap_work <= block_work)
     out["auto_vs_block_evaluated_ratio"] = auto_work / max(block_work, 1.0)
     return out
 

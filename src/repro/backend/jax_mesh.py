@@ -566,6 +566,8 @@ class JaxMeshBackend(SimulatedBackend):
             dispatch_s=stats.get("dispatch_s"),
             artifact_hits=stats.get("artifact_hits"),
             artifact_misses=stats.get("artifact_misses"),
+            block_pairs_bitmap_killed=stats.get("block_pairs_bitmap_killed"),
+            bitmap_build_s=stats.get("bitmap_build_s"),
             **self._resilience_fields(report)))
 
 
@@ -579,9 +581,11 @@ def make_backend(backend: str, n_nodes: int,
     """Build an execution backend by name, degrading ``jax_mesh`` ->
     ``simulated`` with a warning when jax is unavailable. ``prune``
     selects the Pallas join grid (``"dense"`` / ``"block"``-sparse /
-    ``"auto"`` per-task selection, the default) and applies to any
-    backend that joins through the Pallas kernel; ``mqo`` toggles
-    cross-batch task dedup in ``execute_batch`` (off = seed parity)."""
+    ``"bitmap"`` block-sparse + cell-exact hierarchical-bitmap
+    refinement / ``"auto"`` per-task selection on post-bitmap refined
+    pair counts, the default) and applies to any backend that joins
+    through the Pallas kernel; ``mqo`` toggles cross-batch task dedup
+    in ``execute_batch`` (off = seed parity)."""
     if backend == "simulated":
         return SimulatedBackend(n_nodes, cost_model=cost_model,
                                 join_fn=join_fn, join_backend=join_backend,

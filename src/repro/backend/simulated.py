@@ -285,6 +285,8 @@ class SimulatedBackend:
             dispatch_s=stats.get("dispatch_s"),
             artifact_hits=stats.get("artifact_hits"),
             artifact_misses=stats.get("artifact_misses"),
+            block_pairs_bitmap_killed=stats.get("block_pairs_bitmap_killed"),
+            bitmap_build_s=stats.get("bitmap_build_s"),
             **self._resilience_fields(report)))
 
     # ----------------------------------- cross-batch MQO (execute_batch)
@@ -412,6 +414,9 @@ class SimulatedBackend:
                 dispatch_s=stats.get("dispatch_s"),
                 artifact_hits=stats.get("artifact_hits"),
                 artifact_misses=stats.get("artifact_misses"),
+                block_pairs_bitmap_killed=stats.get(
+                    "block_pairs_bitmap_killed"),
+                bitmap_build_s=stats.get("bitmap_build_s"),
                 mqo_tasks_total=total, mqo_tasks_executed=executed,
                 mqo_shared_hits=shared,
                 **self._resilience_fields(r))))

@@ -30,11 +30,16 @@ Join execution backends for the simulated path (``join_backend``):
     TPU). Its ``prune`` knob selects the grid per task: ``"dense"``
     (every block pair evaluated), ``"block"`` (spatially sorted
     coordinates, host-pruned block pairs scalar-prefetched into the
-    kernel), or ``"auto"`` (default — block-sparse only where the
-    padded pair list is shorter than the dense grid, so single-block
-    and near-dense chunk pairs skip prune overhead). Match counts are
-    identical across all three; the work done is reported per query as
-    ``ExecutedQuery.block_pairs_evaluated / block_pairs_total``.
+    kernel), ``"bitmap"`` (block-sparse plus a cell-exact second stage
+    — hierarchical occupancy bitmaps kill bbox-surviving pairs whose
+    occupied cells are provably > eps apart), or ``"auto"`` (default —
+    block-sparse only where the padded bitmap-refined pair list is
+    shorter than the dense grid, so single-block and near-dense chunk
+    pairs skip prune overhead). Match counts are identical across all
+    four; the work done is reported per query as
+    ``ExecutedQuery.block_pairs_evaluated / block_pairs_total`` (plus
+    ``block_pairs_bitmap_killed``/``bitmap_build_s`` when the bitmap
+    stage engaged).
     Host-side prep (sort/boxes/padding/pair lists) is memoized per
     resident chunk in a ``JoinArtifactCache`` invalidated with cache
     residency; the per-query ``prep_s``/``dispatch_s`` split and

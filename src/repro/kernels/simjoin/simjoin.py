@@ -22,7 +22,11 @@ Two kernel variants share the block-pair body:
     ``<= eps`` (``repro.kernels.simjoin.prune``), and scalar-prefetches
     the surviving ``(i, j)`` pair list (the in-repo ``paged_attention``
     ``PrefetchScalarGridSpec`` pattern) so the grid iterates ONLY live
-    pairs — O(live pairs) instead of O(all block pairs) work.
+    pairs — O(live pairs) instead of O(all block pairs) work. The
+    cell-exact bitmap stage (``prune.refine_block_pairs``) rides this
+    same scalar-prefetch path: it only shrinks the host-built pair
+    list further, so the kernel is untouched and iterates strictly
+    fewer live pairs.
 """
 from __future__ import annotations
 

@@ -77,6 +77,45 @@ def test_getters_memoize_and_count():
     assert (cache.hits, cache.misses) == (h, m)
 
 
+def test_bitmap_getters_memoize_and_invalidate():
+    """The bitmap sidecars and refined pair lists are content-addressed
+    join artifacts: memoized per (block, scale) / chunk pair, distinct
+    from the bbox pair list under the same coordinates, recomputed after
+    either side's chunk leaves residency, and uncached for raw-array
+    sides."""
+    cache = JoinArtifactCache()
+    coords = np.arange(12, dtype=np.int32).reshape(6, 2)
+    q = Box((0, 0), (99, 99))
+    v = cache.view(1, Box((0, 0), (11, 11)), q, coords)
+    w = cache.view(2, Box((50, 50), (60, 60)), q, coords)
+    bm = [(np.zeros((1, 2), np.int64), np.zeros((1, 2), np.int64))]
+    assert cache.bitmaps(v, 128, 8, lambda: bm) is bm
+    assert cache.bitmaps(v, 128, 8, lambda: 0 / 0) is bm      # memoized
+    assert cache.bitmaps(v, 128, 4, lambda: list(bm)) is not bm  # per scale
+    ref = (np.ones((2, 3), np.int32), 1)
+    assert cache.refined_pairs(v, w, 128, 3, False, lambda: ref) is ref
+    assert cache.refined_pairs(v, w, 128, 3, False, lambda: 0 / 0) is ref
+    # The bbox pair list at the same (pair, block, eps, same) key
+    # coordinates is a DIFFERENT artifact (distinct tag).
+    bbox = (np.ones((3, 3), np.int32), 4)
+    assert cache.block_pairs(v, w, 128, 3, False, lambda: bbox) is bbox
+    assert cache.refined_pairs(v, w, 128, 3, False, lambda: 0 / 0) is ref
+    # Dropping either side's chunk invalidates the refined list too.
+    cache.on_drop(2)
+    assert not cache.has_chunk(2)
+    ref2 = (np.zeros((1, 3), np.int32), 2)
+    assert cache.refined_pairs(v, w, 128, 3, False, lambda: ref2) is ref2
+    # on_split retires the bitmap sidecars with the parent id.
+    cache.on_split(1, leaves=[])
+    bm2 = [(np.ones((1, 2), np.int64), np.ones((1, 2), np.int64))]
+    assert cache.bitmaps(v, 128, 8, lambda: bm2) is bm2
+    # Uncacheable side -> computed every time, no counters.
+    raw = np.zeros((3, 2), np.int32)
+    h, m = cache.hits, cache.misses
+    assert cache.refined_pairs(v, raw, 128, 3, False, lambda: ref) is ref
+    assert (cache.hits, cache.misses) == (h, m)
+
+
 def test_invalidation_on_drop_split_reconcile():
     class FakeState:
         cached = {1}
@@ -152,28 +191,37 @@ def uniform_coords(rng, n, d=3, hi=400):
 
 @pytest.mark.parametrize("maker", [clustered_coords, uniform_coords])
 def test_auto_parity_and_counters(maker):
-    """prune="auto" counts exactly what dense/block/numpy count, its
-    dense-grid denominator matches theirs, and its evaluated work sits
-    between block's (lower bound) and dense's (upper bound)."""
+    """prune="auto" counts exactly what dense/block/bitmap/numpy count,
+    its dense-grid denominator matches theirs, and its evaluated work
+    sits between bitmap's (the tightest prune — auto's block-routed
+    tasks carry the same refined lists, dense-routed ones their full
+    grid) and dense's (upper bound)."""
     rng = np.random.default_rng(11)
     tasks = make_tasks(rng, maker=maker)
     eps = 40
     dense = PallasJoinExecutor(prune="dense")
     block = PallasJoinExecutor(prune="block")
+    bitmap = PallasJoinExecutor(prune="bitmap")
     auto = PallasJoinExecutor(prune="auto")
     ref = NumpyJoinExecutor(count_similar_pairs_np)
     cd = dense.count_pairs(tasks, eps)
     cb = block.count_pairs(tasks, eps)
+    cm = bitmap.count_pairs(tasks, eps)
     ca = auto.count_pairs(tasks, eps)
     cn = ref.count_pairs(tasks, eps)
-    assert cd == cb == ca == cn
+    assert cd == cb == cm == ca == cn
     assert sum(ca) > 0
     t = dense.last_stats["block_pairs_total"]
     assert auto.last_stats["block_pairs_total"] == t
     assert block.last_stats["block_pairs_total"] == t
-    assert (block.last_stats["block_pairs_evaluated"]
+    assert bitmap.last_stats["block_pairs_total"] == t
+    assert (bitmap.last_stats["block_pairs_evaluated"]
+            <= block.last_stats["block_pairs_evaluated"] <= t)
+    assert (bitmap.last_stats["block_pairs_evaluated"]
             <= auto.last_stats["block_pairs_evaluated"] <= t)
-    for ex in (dense, block, auto):
+    assert bitmap.last_stats["block_pairs_bitmap_killed"] >= 0
+    assert bitmap.last_stats["bitmap_build_s"] >= 0
+    for ex in (dense, block, bitmap, auto):
         assert ex.last_stats["prep_s"] >= 0
         assert ex.last_stats["dispatch_s"] >= 0
 
@@ -222,7 +270,7 @@ def test_executor_artifact_reuse_with_views():
     a = clustered_coords(rng, 900)
     b = clustered_coords(rng, 500)
     q = Box((0, 0, 0), tuple([60_000] * 3))
-    for mode in ("dense", "block", "auto"):
+    for mode in ("dense", "block", "bitmap", "auto"):
         ex = PallasJoinExecutor(prune=mode)
         va = ex.artifacts.view(1, Box((0, 0, 0), (50_100, 50_100, 50_100)),
                                q, a)
@@ -237,6 +285,46 @@ def test_executor_artifact_reuse_with_views():
             prune=mode).count_pairs(raw, 35), mode
         assert ex.last_stats["artifact_hits"] > 0, mode
         assert ex.last_stats["artifact_misses"] == 0, mode
+
+
+def test_bitmap_eps0_and_duplicate_parity():
+    """The eps=0 edge of the cell-exact stage: the quantization step
+    degenerates to 1 and the occupied-cell test is an exact point
+    membership test — duplicated cells (the only eps=0 matches) must
+    count identically under every prune mode."""
+    rng = np.random.default_rng(17)
+    base = clustered_coords(rng, 600)
+    dup = np.repeat(base[:40], 10, axis=0)        # duplicates: matches
+    tasks = [(0, base, base, True), (1, dup, dup, True),
+             (0, base, dup, False)]
+    for eps in (0, 1):
+        want = NumpyJoinExecutor(count_similar_pairs_np).count_pairs(
+            tasks, eps)
+        assert sum(want) > 0
+        for mode in ("dense", "block", "bitmap", "auto"):
+            got = PallasJoinExecutor(prune=mode).count_pairs(tasks, eps)
+            assert got == want, (mode, eps)
+
+
+def test_bitmap_stats_only_when_engaged():
+    """The bitmap counters ride a conditional emission group: present
+    exactly when the refinement stage ran on >= 1 multi-block candidate
+    — absent under dense/block modes and on auto's single-block fast
+    path, so summaries of workloads that never engage the feature are
+    bit-identical to the pre-bitmap ones."""
+    rng = np.random.default_rng(23)
+    multi = clustered_coords(rng, 600)
+    ex = PallasJoinExecutor(prune="bitmap")
+    ex.count_pairs([(0, multi, multi, True)], 40)
+    assert ex.last_stats["block_pairs_bitmap_killed"] >= 0
+    assert ex.last_stats["bitmap_build_s"] >= 0
+    blk = PallasJoinExecutor(prune="block")
+    blk.count_pairs([(0, multi, multi, True)], 40)
+    assert "block_pairs_bitmap_killed" not in blk.last_stats
+    small = clustered_coords(rng, 100)            # single 128-block
+    au = PallasJoinExecutor(prune="auto")
+    au.count_pairs([(0, small, small, True)], 40)
+    assert "block_pairs_bitmap_killed" not in au.last_stats
 
 
 def test_auto_default_is_accepted_by_every_executor():
@@ -284,14 +372,16 @@ def workload(catalog, eps=400):
 
 @pytest.mark.parametrize("backend", ["simulated", "jax_mesh"])
 def test_prune_mode_parity_both_backends(dataset, backend):
-    """Match counts bit-identical across prune=dense|block|auto on each
-    backend (the ISSUE-5 acceptance gate)."""
+    """Match counts bit-identical across prune=dense|block|bitmap|auto
+    on each backend (the ISSUE-5 acceptance gate, extended to the
+    cell-exact bitmap stage by ISSUE 9)."""
     catalog, _ = dataset
     queries = workload(catalog)
     runs = {p: [e.matches for e in
                 make_cluster(dataset, backend, p).run_workload(queries)]
-            for p in ("dense", "block", "auto")}
-    assert runs["dense"] == runs["block"] == runs["auto"]
+            for p in ("dense", "block", "bitmap", "auto")}
+    assert (runs["dense"] == runs["block"] == runs["bitmap"]
+            == runs["auto"])
     assert sum(m or 0 for m in runs["dense"]) > 0
 
 
@@ -315,10 +405,13 @@ def test_warm_equals_cold_with_hits(dataset):
             assert e.prep_s is not None and e.dispatch_s is not None
 
 
-def test_warm_bit_identical_across_evict_readmit_split(dataset):
+@pytest.mark.parametrize("prune_mode", ["auto", "bitmap"])
+def test_warm_bit_identical_across_evict_readmit_split(dataset,
+                                                       prune_mode):
     """The acceptance sequence: evict -> re-admit -> split, every step
     answered identically by a long-lived (warm) cluster, a fresh dense
-    cluster, and the numpy reference — no stale-artifact path."""
+    cluster, and the numpy reference — no stale-artifact path, including
+    the bitmap sidecars and refined pair lists of prune="bitmap"."""
     from repro.arrayio.catalog import FileReader
     from repro.core.cluster import RawArrayCluster
     from repro.core.coordinator import SimilarityJoinQuery
@@ -329,7 +422,8 @@ def test_warm_bit_identical_across_evict_readmit_split(dataset):
     mid = tuple((l + h) // 2 for l, h in zip(d.lo, d.hi))
     q_sub = SimilarityJoinQuery(box=Box(d.lo, mid), eps=400)
     seq = q_main + q_main + [q_sub] + q_main     # repeat / split / repeat
-    warm = make_cluster(dataset, budget_frac=16,    # tight: forces evicts
+    warm = make_cluster(dataset, prune=prune_mode,
+                        budget_frac=16,             # tight: forces evicts
                         min_cells=256)
     got = [e.matches for e in warm.run_workload(seq)]
     dense = make_cluster(dataset, prune="dense", budget_frac=16,
@@ -406,3 +500,21 @@ def test_workload_summary_amortization_counters(dataset):
                              policy="cost", min_cells=512,
                              join_backend="numpy").run_workload(queries)
     assert "prep_s" not in workload_summary(np_run)
+
+
+def test_workload_summary_bitmap_group_gating(dataset):
+    """``block_pairs_bitmap_killed``/``bitmap_build_s`` surface in
+    ``workload_summary`` exactly when the cell-exact stage engaged:
+    present under prune="bitmap", absent under prune="block" (whose
+    summaries must stay bit-identical to the pre-bitmap seed shape)."""
+    from repro.core.cluster import workload_summary
+    catalog, _ = dataset
+    queries = workload(catalog)[:3]
+    with_bitmap = workload_summary(
+        make_cluster(dataset, prune="bitmap").run_workload(queries))
+    assert "block_pairs_bitmap_killed" in with_bitmap
+    assert with_bitmap["bitmap_build_s"] >= 0
+    without = workload_summary(
+        make_cluster(dataset, prune="block").run_workload(queries))
+    assert "block_pairs_bitmap_killed" not in without
+    assert "bitmap_build_s" not in without

@@ -177,7 +177,7 @@ def test_no_retrace_across_repeated_same_shape_queries():
     only) — the recompile guard of the batched executor."""
     rng = np.random.default_rng(2)
     tasks = make_tasks(rng, k=4)
-    for prune_mode in ("dense", "block"):
+    for prune_mode in ("dense", "block", "bitmap"):
         ex = PallasJoinExecutor(prune=prune_mode)
         first = ex.count_pairs(tasks, 25)       # traces once per bucket
         before = dict(ops.TRACE_COUNTS)
@@ -190,6 +190,8 @@ def test_no_retrace_across_repeated_same_shape_queries():
 def test_make_join_executor_prune_validation():
     with pytest.raises(ValueError, match="prune"):
         make_join_executor("numpy", count_similar_pairs_np, prune="block")
+    with pytest.raises(ValueError, match="prune"):
+        make_join_executor("numpy", count_similar_pairs_np, prune="bitmap")
     with pytest.raises(ValueError, match="unknown prune mode"):
         PallasJoinExecutor(prune="sparse")
 
