@@ -13,12 +13,17 @@ plus two executed-join sections:
   * the failover scenario (``run_failover``): a skewed workload with
     the hottest node killed mid-run, replication off/on on both
     backends, recording post-kill tail latency and the
-    replica-vs-raw recovery split.
+    replica-vs-raw recovery split;
+  * the chaos scenario (``run_chaos``): the same replicated workload
+    under seeded fault storms at increasing rates on both backends,
+    recording completed/degraded fractions, latency inflation vs the
+    fault-free baseline, and the reroute-vs-raw-fallback recovery
+    split.
 
 The sections emit structured row dicts and merge them into
 ``BENCH_caching.json`` (under the ``backends`` / ``mqo`` /
-``failover`` keys, preserving whatever ``bench_caching`` wrote) so
-successive PRs can diff the perf trajectory.
+``failover`` / ``chaos`` keys, preserving whatever ``bench_caching``
+wrote) so successive PRs can diff the perf trajectory.
 
 Run the backend sections with virtual devices to exercise real
 cross-device transfers on a CPU-only host:
@@ -288,6 +293,103 @@ def run_failover(n_queries: int = 48, n_templates: int = 6,
     return rows
 
 
+def run_chaos(n_queries: int = 36, n_templates: int = 4,
+              batch_size: int = 4, print_rows: bool = True,
+              seed: int = 73,
+              rates: Sequence[float] = (0.0, 0.05, 0.15)) -> List[Dict]:
+    """Chaos scenario (ISSUE 10): a broad-field Zipf workload on a
+    replicated cluster, swept across seeded fault-storm rates on both
+    backends. ``rate == 0`` is the fault-free baseline row; each faulted
+    row records the completed/degraded query fractions, the wall-clock
+    and p95 modeled-latency inflation over the baseline, the
+    recovery-source split (``transfer_reroutes`` — retries re-sourced
+    from a surviving replica — vs ``raw_fallbacks`` — transfers that
+    exhausted every replica and re-scanned raw files), the checksum
+    catches, and the audit-violation count (zero by construction). The
+    parity flag asserts every *completed* query's match count is
+    bit-identical to the baseline — degraded-mode serving never leaks
+    into completed answers."""
+    from repro.faults import FaultInjector
+    catalog, reader = build_ptf("hdf5", n_files=12, cells=1500, seed=35)
+    # field_frac=0.5: query boxes span files on several nodes, so join
+    # plans carry live transfer routes — the storm's ship.transfer
+    # faults then exercise the re-route → raw-fallback ladder.
+    queries = zipf_workload(catalog.domain, n_queries=n_queries,
+                            n_templates=n_templates, s=1.5, eps=300,
+                            field_frac=0.5, seed=seed)
+    budget = dataset_bytes(catalog) // 4
+
+    def build(backend: str, faults) -> RawArrayCluster:
+        return RawArrayCluster(
+            catalog, reader, N_NODES, budget // N_NODES, policy="cost",
+            min_cells=48, execute_joins=True, backend=backend,
+            join_backend="pallas", prune="auto", replication="hot",
+            replica_k=2, replication_threshold=2.0, faults=faults)
+
+    def p95(values: List[float]) -> float:
+        xs = sorted(values)
+        return xs[min(len(xs) - 1, int(0.95 * len(xs)))]
+
+    rows: List[Dict] = []
+    for backend in ("simulated", "jax_mesh"):
+        # Warmup: the first run per backend pays one-time JIT/page-cache
+        # costs that would otherwise inflate the fault-free baseline and
+        # make the faulted rows look *faster* than rate 0.
+        build(backend, "off").run_workload(queries, batch_size=batch_size)
+        base_us = base_p95 = None
+        ref_matches: List = []
+        for rate in rates:
+            faults = (FaultInjector.storm(rate, seed=seed)
+                      if rate > 0 else "off")
+            cluster = build(backend, faults)
+            executed, us = timed(cluster.run_workload, queries,
+                                 batch_size=batch_size)
+            summ = workload_summary(executed)
+            lat_p95 = p95([e.time_total_s for e in executed])
+            if rate == 0:
+                base_us, base_p95 = us, lat_p95
+                ref_matches = [e.matches for e in executed]
+            degraded = int(summ.get("degraded_queries", 0))
+            completed_parity = all(
+                e.matches == m
+                for e, m in zip(executed, ref_matches)
+                if e.degraded is None)
+            label = f"{backend}_rate_{rate:g}"
+            rows.append({
+                "backend": backend, "fault_rate": rate, "seed": seed,
+                "n_queries": n_queries, "n_templates": n_templates,
+                "batch_size": batch_size, "bench_us": us,
+                "completed_frac": (len(executed) - degraded)
+                                  / len(executed),
+                "degraded_frac": degraded / len(executed),
+                "wall_inflation": us / base_us if base_us else 1.0,
+                "p95_total_s": lat_p95,
+                "p95_inflation": lat_p95 / base_p95 if base_p95 else 1.0,
+                "faults_injected": summ.get("faults_injected", 0.0),
+                "retries": summ.get("retries", 0.0),
+                "transfer_reroutes": summ.get("transfer_reroutes", 0.0),
+                "raw_fallbacks": summ.get("raw_fallbacks", 0.0),
+                "checksum_mismatch": summ.get("checksum_mismatch", 0.0),
+                "audit_violations": summ.get("audit_violations", 0.0),
+                "completed_match_parity": completed_parity,
+            })
+            if print_rows:
+                print(f"chaos/{label}/completed_frac,{us:.0f},"
+                      f"{rows[-1]['completed_frac']:.3f}")
+                print(f"chaos/{label}/injected_retries,0,"
+                      f"{rows[-1]['faults_injected']:.0f}/"
+                      f"{rows[-1]['retries']:.0f}")
+                print(f"chaos/{label}/recovery_split,0,"
+                      f"{rows[-1]['transfer_reroutes']:.0f}/"
+                      f"{rows[-1]['raw_fallbacks']:.0f}")
+                print(f"chaos/{label}/wall_inflation,0,"
+                      f"{rows[-1]['wall_inflation']:.3f}")
+                print(f"chaos/{label}/violations_parity,0,"
+                      f"{rows[-1]['audit_violations']:.0f}/"
+                      f"{int(completed_parity)}")
+    return rows
+
+
 #: Telemetry-only recording hooks outside ``src/repro/obs/`` whose
 #: self-time counts as instrumentation cost in ``run_observability``.
 _TELEMETRY_FUNCS = frozenset({
@@ -400,11 +502,12 @@ def run_observability(n_queries: int = 60, n_templates: int = 12,
 def merge_json(path: str, backends_rows: Optional[List[Dict]] = None,
                mqo_rows: Optional[List[Dict]] = None,
                failover_rows: Optional[List[Dict]] = None,
-               observability_rows: Optional[List[Dict]] = None) -> None:
+               observability_rows: Optional[List[Dict]] = None,
+               chaos_rows: Optional[List[Dict]] = None) -> None:
     """Read-modify-write ``BENCH_caching.json``: replace only the
-    ``backends`` / ``mqo`` / ``failover`` / ``observability`` keys,
-    preserving everything ``bench_caching`` (or a previous run)
-    recorded."""
+    ``backends`` / ``mqo`` / ``failover`` / ``observability`` /
+    ``chaos`` keys, preserving everything ``bench_caching`` (or a
+    previous run) recorded."""
     data: Dict = {}
     if os.path.exists(path):
         with open(path) as fh:
@@ -417,6 +520,8 @@ def merge_json(path: str, backends_rows: Optional[List[Dict]] = None,
         data["failover"] = failover_rows
     if observability_rows is not None:
         data["observability"] = observability_rows
+    if chaos_rows is not None:
+        data["chaos"] = chaos_rows
     with open(path, "w") as fh:
         json.dump(data, fh, indent=2, sort_keys=True)
     print(f"wrote {path}")
@@ -447,12 +552,14 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                        seed=args.seed + 8)
     failover_rows = run_failover(n_queries=max(args.n_queries, 24),
                                  seed=args.seed + 24)
+    chaos_rows = run_chaos(n_queries=max(args.n_queries, 24),
+                           seed=args.seed + 40)
     observability_rows = (run_observability(n_queries=max(args.n_queries, 24),
                                             seed=args.seed + 8)
                           if args.trace else None)
     if args.out:
         merge_json(args.out, backends_rows, mqo_rows, failover_rows,
-                   observability_rows)
+                   observability_rows, chaos_rows)
 
 
 if __name__ == "__main__":

@@ -16,6 +16,7 @@ from repro.arrayio import formats
 from repro.arrayio.generator import GeneratedFile
 from repro.core.chunk import FileMeta
 from repro.core.geometry import Box, enclosing
+from repro.faults.errors import ScanError
 
 
 @dataclasses.dataclass
@@ -81,9 +82,21 @@ class FileReader:
         self._data = data or {}
 
     def read(self, file_id: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Cells of ``file_id`` as ``(coords, attrs)``, memoized.
+
+        A missing or truncated file (or a decoder failure) raises a
+        typed :class:`~repro.faults.errors.ScanError` naming the file —
+        the planner annotates it with the queried box and routes it
+        through the retry/degrade path instead of letting a bare
+        ``OSError``/numpy exception escape mid-scan."""
         if file_id in self._data:
             return self._data[file_id]
         meta = self.catalog.by_id(file_id)
-        coords, attrs = formats.read_array_file(meta.path, meta.fmt)
+        try:
+            coords, attrs = formats.read_array_file(meta.path, meta.fmt)
+        except ScanError:
+            raise
+        except (OSError, ValueError, EOFError, IndexError, KeyError) as e:
+            raise ScanError(file_id, meta.path, cause=e) from e
         self._data[file_id] = (coords, attrs)
         return coords, attrs

@@ -291,6 +291,25 @@ class JoinArtifactCache:
         """Total live artifact records (entries + pair lists)."""
         return len(self._entries) + len(self._pairs)
 
+    def audit(self) -> List[str]:
+        """Internal-index consistency check (used by the cross-layer
+        ``InvariantAuditor``): every live entry and pair list must be
+        reachable from ``_by_chunk``, else a residency event could never
+        invalidate it. Returns one description per violation."""
+        out: List[str] = []
+        indexed: Set[tuple] = set()
+        for keys in self._by_chunk.values():
+            indexed.update(keys)
+        for key in self._entries:
+            if key not in indexed:
+                out.append(f"artifact entry {key!r} unreachable from "
+                           f"the chunk index")
+        for key in self._pairs:
+            if key not in indexed:
+                out.append(f"pair artifact {key!r} unreachable from "
+                           f"the chunk index")
+        return out
+
     # ---------------------------------------------------- invalidation
 
     def _evict_subset(self, cid: int, subset: tuple) -> None:

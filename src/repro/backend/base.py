@@ -27,6 +27,7 @@ if TYPE_CHECKING:  # planning types only; no runtime import cycle
     from repro.core.chunk import ChunkMeta
     from repro.core.coordinator import (CacheCoordinator, QueryReport,
                                         SimilarityJoinQuery)
+    from repro.faults.retry import DegradedResult
 
 BACKENDS = ("simulated", "jax_mesh")
 
@@ -107,6 +108,28 @@ class ExecutedQuery:
     recovery_bytes_from_replica: Optional[int] = None
     recovery_bytes_from_raw: Optional[int] = None
     recovery_s: Optional[float] = None
+    # Transient-fault pipeline counters (None whenever the coordinator's
+    # ``faults`` knob is off, so fault-free workload summaries are
+    # bit-identical to the pre-fault ones): seeded injections attributed
+    # to this query, retry activity (re-attempts, backoff seconds spent,
+    # exhausted budgets), transfer re-routes to surviving replicas and
+    # raw-file fallbacks, checksum mismatches caught on shipped
+    # payloads, and whether this query degraded (0/1).
+    faults_injected: Optional[int] = None
+    retries: Optional[int] = None
+    retry_backoff_s: Optional[float] = None
+    retry_giveups: Optional[int] = None
+    transfer_reroutes: Optional[int] = None
+    raw_fallbacks: Optional[int] = None
+    checksum_mismatch: Optional[int] = None
+    degraded_queries: Optional[int] = None
+    # Invariant-audit violations attributed to this query (None when no
+    # auditor is armed; rides its own emission group so audit-only runs
+    # don't drag the fault counters into summaries).
+    audit_violations: Optional[int] = None
+    # The typed degraded-mode payload (None = the query completed):
+    # which sub-boxes were served / failed and which operations gave up.
+    degraded: Optional["DegradedResult"] = None
 
     @property
     def time_total_s(self) -> float:
@@ -187,6 +210,11 @@ SUMMARY_GROUPS: Dict[str, str] = {
     "recovery_bytes_from_replica": "failover",
     "recovery_bytes_from_raw": "failover", "recovery_s": "failover",
     "result_cache_hits": "result_cache",
+    "faults_injected": "faults", "retries": "faults",
+    "retry_backoff_s": "faults", "retry_giveups": "faults",
+    "transfer_reroutes": "faults", "raw_fallbacks": "faults",
+    "checksum_mismatch": "faults", "degraded_queries": "faults",
+    "audit_violations": "audit",
 }
 
 # Ungrouped summary counters, in emission order (before any group).
@@ -252,6 +280,15 @@ def record_executed(registry: MetricsRegistry, e: ExecutedQuery) -> None:
     c("recovery_bytes_from_replica").inc(e.recovery_bytes_from_replica or 0)
     c("recovery_bytes_from_raw").inc(e.recovery_bytes_from_raw or 0)
     c("recovery_s").inc(e.recovery_s or 0.0)
+    c("faults_injected").inc(e.faults_injected or 0)
+    c("retries").inc(e.retries or 0)
+    c("retry_backoff_s").inc(e.retry_backoff_s or 0.0)
+    c("retry_giveups").inc(e.retry_giveups or 0)
+    c("transfer_reroutes").inc(e.transfer_reroutes or 0)
+    c("raw_fallbacks").inc(e.raw_fallbacks or 0)
+    c("checksum_mismatch").inc(e.checksum_mismatch or 0)
+    c("degraded_queries").inc(e.degraded_queries or 0)
+    c("audit_violations").inc(e.audit_violations or 0)
     hit = bool(getattr(e.report, "result_cache_hit", False))
     c("result_cache_hits").inc(1 if hit else 0)
     if e.measured_net_s is not None:
@@ -268,6 +305,10 @@ def record_executed(registry: MetricsRegistry, e: ExecutedQuery) -> None:
         registry.mark_group("replica")
     if e.failover_readmits is not None:
         registry.mark_group("failover")
+    if e.faults_injected is not None:
+        registry.mark_group("faults")
+    if e.audit_violations is not None:
+        registry.mark_group("audit")
     if hit:
         registry.mark_group("result_cache")
 

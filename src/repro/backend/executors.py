@@ -129,6 +129,12 @@ def bucket_by_shape(tasks: Sequence[JoinTask], block: int,
 class NumpyJoinExecutor:
     """Reference executor: evaluate each pair independently."""
 
+    # The fault points a join round through this executor crosses, in
+    # order (the backends arm them — with retry — before dispatching;
+    # see ``SimulatedBackend._arm_join_points``). The numpy reference
+    # has no host-prep stage to fail, only the dispatch itself.
+    fault_points = ("dispatch.kernel",)
+
     def __init__(self, join_fn: Callable[..., int]):
         self.join_fn = join_fn
         # Block-pair counters are a kernel-path concept; the numpy
@@ -184,6 +190,12 @@ class PallasJoinExecutor:
     dispatch through the SAME bound callable, so jax's jit cache is hit
     without re-binding statics (``ops.TRACE_COUNTS`` proves no retrace).
     """
+
+    # A join round through this executor has two failure-prone stages:
+    # the host-side batch build and the kernel dispatch. The backends
+    # arm these fault points (with retry) before the round — re-arming
+    # without re-running is a faithful redo since both are pure.
+    fault_points = ("prep.build", "dispatch.kernel")
 
     def __init__(self, interpret: bool = True, prune: str = "auto",
                  artifacts: Optional[JoinArtifactCache] = None):

@@ -51,6 +51,7 @@ from repro.backend.artifacts import ChunkView
 from repro.backend.base import BACKENDS, ExecutedQuery
 from repro.backend.cost_model import CostModel
 from repro.backend.simulated import SimulatedBackend
+from repro.faults.errors import RetryExhaustedError
 
 
 def compiled_mode_supported() -> bool:
@@ -357,26 +358,31 @@ class JaxMeshBackend(SimulatedBackend):
             reg.gauge(f"device.{k}").set(v)
 
     def _ship(self, report: "QueryReport",
-              coords_of: Callable[[int], np.ndarray]
+              coords_of: Callable[[int], np.ndarray],
+              skip: Optional[set] = None
               ) -> Tuple[float, int]:
         """Replay the join plan's ship decisions as real cross-device
         transfers; returns (measured seconds, measured bytes). Routes
         whose src and dest land on the same physical device (mesh wrap)
-        move no bytes and are excluded from the byte count. Wrapped in a
-        ``ship`` span when telemetry is on."""
+        move no bytes and are excluded from the byte count, as are
+        routes for ``skip`` chunks (transfers already declared degraded
+        by the fault guard — no source can produce their payload).
+        Wrapped in a ``ship`` span when telemetry is on."""
         import jax
         import jax.numpy as jnp
         if report.join_plan is None:
             return 0.0, 0
         with self.telemetry.tracer.span(
                 "ship", routes=len(report.join_plan.transfer_routes)):
-            total_s, total_b = self._ship_routes(report, coords_of)
+            total_s, total_b = self._ship_routes(report, coords_of,
+                                                 skip=skip)
         if self.telemetry.enabled:
             self._mirror_device_stats()
         return total_s, total_b
 
     def _ship_routes(self, report: "QueryReport",
-                     coords_of: Callable[[int], np.ndarray]
+                     coords_of: Callable[[int], np.ndarray],
+                     skip: Optional[set] = None
                      ) -> Tuple[float, int]:
         """The transfer-replay loop behind :meth:`_ship`."""
         import jax
@@ -386,6 +392,8 @@ class JaxMeshBackend(SimulatedBackend):
         staged: Dict[int, Any] = {}
         reuse_on = self.coordinator.reuse == "on"
         for cid, src, dst in report.join_plan.transfer_routes:
+            if skip and cid in skip:
+                continue
             src_dev = self.device_for_node(src)
             dst_dev = self.device_for_node(dst)
             if src_dev == dst_dev:
@@ -507,11 +515,13 @@ class JaxMeshBackend(SimulatedBackend):
 
     def _measured_ship(self, query: "SimilarityJoinQuery",
                        report: "QueryReport",
-                       coords_cache: Dict[int, np.ndarray]
+                       coords_cache: Dict[int, np.ndarray],
+                       skip: Optional[set] = None
                        ) -> Tuple[Optional[float], Optional[int]]:
         """Batch-execution seam: replay this query's ship decisions as
         real cross-device transfers (shipping stays per-query under MQO
-        — only kernel work is deduplicated across the batch)."""
+        — only kernel work is deduplicated across the batch). ``skip``
+        chunks degraded by the fault guard are not replayed."""
         cm = {c.chunk_id: c for c in report.queried_chunks}
 
         def coords_of(cid: int) -> np.ndarray:
@@ -523,7 +533,7 @@ class JaxMeshBackend(SimulatedBackend):
             return self.coordinator.chunks.chunk_coords(
                 cid, cm[cid].file_id)
 
-        return self._ship(report, coords_of)
+        return self._ship(report, coords_of, skip=skip)
 
     def execute(self, query: "SimilarityJoinQuery",
                 report: "QueryReport") -> ExecutedQuery:
@@ -536,23 +546,34 @@ class JaxMeshBackend(SimulatedBackend):
             return self._cached_result(report)
         time_scan = self.modeled_scan_time(report)
         time_net = self.modeled_net_time(report)
+        drop, ship_ops = self._guard_transfers(query, report)
         tasks, work_by_node, coords_cache, _ = self.gather_join_tasks(
-            query, report)
+            query, report, exclude=drop)
         # Ship what the plan ships: the sliced extent under semantic
         # reuse, the whole chunk otherwise (a shipped chunk becomes a
-        # full replica the placement round may keep).
+        # full replica the placement round may keep). The host-level
+        # fault guard runs first, so only routes with a producible
+        # payload replay as real device transfers.
         measured_net, measured_bytes = self._measured_ship(
-            query, report, coords_cache)
+            query, report, coords_cache, skip=drop)
         matches: Optional[int] = None
         measured_compute = 0.0
         stats: Dict[str, int] = {}
+        join_ops: List[str] = []
         if report.join_plan is not None and self.execute_joins:
-            counts, measured_compute, stats = self._dispatch_joins(
-                tasks, query.eps)
-            matches = sum(counts)
+            try:
+                counts, stats = self._guarded_count(tasks, query.eps)
+                matches = sum(counts)
+                measured_compute = stats.get("measured_compute_s", 0.0)
+            except RetryExhaustedError as e:
+                join_ops.append(e.op)
+                matches = 0
+                stats = {}
         time_compute = (max(work_by_node.values(), default=0)
                         / self.cost.cell_pairs_per_sec)
         t_opt = report.opt_time_chunking_s + report.opt_time_evict_place_s
+        degraded = self._assemble_degraded(query, report, drop, ship_ops,
+                                           join_ops, matches)
         return self._record(ExecutedQuery(
             report=report, time_scan_s=time_scan, time_net_s=time_net,
             time_compute_s=time_compute, time_opt_s=t_opt, matches=matches,
@@ -568,7 +589,8 @@ class JaxMeshBackend(SimulatedBackend):
             artifact_misses=stats.get("artifact_misses"),
             block_pairs_bitmap_killed=stats.get("block_pairs_bitmap_killed"),
             bitmap_build_s=stats.get("bitmap_build_s"),
-            **self._resilience_fields(report)))
+            **self._resilience_fields(report),
+            **self._fault_fields(degraded)))
 
 
 def make_backend(backend: str, n_nodes: int,

@@ -28,6 +28,9 @@ from repro.backend.base import ExecutedQuery, record_executed
 from repro.backend.cost_model import CostModel
 from repro.backend.executors import (JoinTask, count_similar_pairs_np,
                                      make_join_executor)
+from repro.faults.errors import RetryExhaustedError
+from repro.faults.injector import ChecksumRegistry
+from repro.faults.retry import DegradedResult, make_degraded
 from repro.obs.telemetry import NULL_TELEMETRY, Telemetry
 
 # Cross-batch multi-query optimization knob: "off" preserves the seed
@@ -65,6 +68,15 @@ class SimulatedBackend:
         # Replaced with the coordinator's telemetry bundle at bind time;
         # the no-op default keeps an unbound backend span/metric-free.
         self.telemetry: Telemetry = NULL_TELEMETRY
+        # Transient-fault plumbing, adopted from the coordinator at bind
+        # time (all None/zero when the faults knob is off — the guarded
+        # paths collapse to the seed-exact ones).
+        self.faults = None
+        self.retrier = None
+        self.checksums: Optional[ChecksumRegistry] = None
+        self._reroutes = 0
+        self._raw_fallbacks = 0
+        self._fault_seen: Dict[str, float] = {}
 
     # ------------------------------------------------------------- binding
 
@@ -81,6 +93,22 @@ class SimulatedBackend:
             self.executor.tracer = self.telemetry.tracer
         if self.artifacts is not None:
             coordinator.cache.add_listener(self.artifacts)
+        # Adopt the coordinator's transient-fault pipeline: the shared
+        # injector/retrier (so planner and backend draw from the same
+        # deterministic schedules and retry budget), per-chunk payload
+        # checksums for corruption faults, and the invariant auditor's
+        # backend attachment (enables its device-buffer checks).
+        self.faults = coordinator.faults
+        self.retrier = coordinator.retrier
+        self.checksums = (ChecksumRegistry()
+                          if self.faults is not None else None)
+        if self.checksums is not None:
+            # Lifecycle hygiene: recorded CRCs die with their chunks
+            # (split-remap/evict), like every other derived tier.
+            coordinator.cache.add_listener(self.checksums)
+        self._fault_seen = self._fault_totals()
+        if coordinator.auditor is not None:
+            coordinator.auditor.attach(self)
 
     def _record(self, eq: ExecutedQuery) -> ExecutedQuery:
         """Mirror a freshly built ExecutedQuery into the live metrics
@@ -127,13 +155,19 @@ class SimulatedBackend:
         return time_net + report.placement_extra_bytes / self.cost.net_bw
 
     def gather_join_tasks(self, query: "SimilarityJoinQuery",
-                          report: "QueryReport"
+                          report: "QueryReport",
+                          exclude: Optional[set] = None
                           ) -> Tuple[List[JoinTask], Dict[int, int],
                                      Dict[int, np.ndarray], List[
                                          Optional[tuple]]]:
         """Materialize the plan's chunk-pair work: (tasks, per-node
         cell-pair load, per-chunk queried coordinates, per-task sharing
         signatures).
+
+        ``exclude`` names chunk ids whose transfers exhausted their
+        retry budget (see ``_guard_transfers``): every pair touching one
+        is skipped — its region is served as a degraded sub-box instead
+        of crashing the query — and its cell-pair work is not charged.
 
         With a pallas executor each task side is a
         :class:`~repro.backend.artifacts.ChunkView` keyed by chunk
@@ -167,6 +201,8 @@ class SimulatedBackend:
             return tasks, work_by_node, coords_cache, sigs
         skip_empty = self.coordinator.reuse == "on"
         for (a, b), node in report.join_plan.pair_node.items():
+            if exclude and (a in exclude or b in exclude):
+                continue
             for cid in (a, b):
                 if cid not in coords_cache:
                     coords_cache[cid] = self._queried_coords(
@@ -228,6 +264,175 @@ class SimulatedBackend:
             out["recovery_s"] = float(pending.get("recovery_s", 0.0))
         return out
 
+    # ----------------------------------------------- transient faults
+
+    def _fault_totals(self) -> Dict[str, float]:
+        """Cumulative fault-pipeline totals across every shared source:
+        the injector, the retrier, the checksum registry, the auditor,
+        and the backend-local re-route / raw-fallback counters. Per-query
+        attribution is the delta between two snapshots (see
+        :meth:`_fault_fields`) — all zeros when the pipeline is off."""
+        coord = self.coordinator
+        auditor = coord.auditor if coord is not None else None
+        return {
+            "faults_injected": float(
+                self.faults.injected if self.faults is not None else 0),
+            "retries": float(
+                self.retrier.retries if self.retrier is not None else 0),
+            "retry_backoff_s": float(
+                self.retrier.backoff_s if self.retrier is not None else 0.0),
+            "retry_giveups": float(
+                self.retrier.giveups if self.retrier is not None else 0),
+            "transfer_reroutes": float(self._reroutes),
+            "raw_fallbacks": float(self._raw_fallbacks),
+            "checksum_mismatch": float(
+                self.checksums.mismatches
+                if self.checksums is not None else 0),
+            "audit_violations": float(
+                auditor.violations_total if auditor is not None else 0),
+        }
+
+    def _fault_fields(self, degraded: Optional[DegradedResult]
+                      ) -> Dict[str, object]:
+        """Fault/retry/audit counter fields for one ExecutedQuery,
+        attributed by snapshot delta against the totals recorded at the
+        previous query (batched execution attributes its shared
+        guard-phase work to the batch's first assembled query — sums
+        stay exact). Empty when faults and auditing are both off,
+        keeping the default ExecutedQuery bit-identical to the seed's."""
+        coord = self.coordinator
+        if coord is None or (coord.faults is None and coord.auditor is None):
+            return {}
+        now = self._fault_totals()
+        delta = {k: now[k] - self._fault_seen.get(k, 0.0) for k in now}
+        self._fault_seen = now
+        out: Dict[str, object] = {}
+        if coord.faults is not None:
+            out["faults_injected"] = int(delta["faults_injected"])
+            out["retries"] = int(delta["retries"])
+            out["retry_backoff_s"] = float(delta["retry_backoff_s"])
+            out["retry_giveups"] = int(delta["retry_giveups"])
+            out["transfer_reroutes"] = int(delta["transfer_reroutes"])
+            out["raw_fallbacks"] = int(delta["raw_fallbacks"])
+            out["checksum_mismatch"] = int(delta["checksum_mismatch"])
+            out["degraded_queries"] = 1 if degraded is not None else 0
+            out["degraded"] = degraded
+        if coord.auditor is not None:
+            out["audit_violations"] = int(delta["audit_violations"])
+        return out
+
+    def _guard_transfers(self, query: "SimilarityJoinQuery",
+                         report: "QueryReport"
+                         ) -> Tuple[set, List[str]]:
+        """Arm the ``ship.transfer`` fault point once per planned
+        transfer route, retrying with replica re-routing (attempt ``a``
+        re-sources from surviving replica ``a % len(replicas)``) and
+        falling back to a raw-file re-scan before declaring a chunk
+        degraded.
+
+        Returns ``(drop, ops)``: chunk ids whose payload no source could
+        produce (their join pairs are excluded and their query overlap
+        becomes a degraded sub-box) plus the operation names whose
+        budgets were exhausted. Payloads are checksummed on first sight,
+        so corruption faults surface as
+        :class:`~repro.faults.errors.ChecksumError` and retry like any
+        other transient."""
+        drop: set = set()
+        ops: List[str] = []
+        coord = self.coordinator
+        if (self.faults is None or coord is None
+                or report.join_plan is None):
+            return drop, ops
+        cm = {c.chunk_id: c for c in report.queried_chunks}
+        for cid, src, dst in report.join_plan.transfer_routes:
+            if cid in drop or cid not in cm:
+                continue
+            payload = coord.chunks.chunk_coords(cid, cm[cid].file_id)
+            if payload is not None:
+                self.checksums.record(cid, payload)
+            reps = sorted(coord.cache.replicas_of(cid)) or [src]
+
+            def attempt(a: int, cid=cid, src=src, dst=dst,
+                        payload=payload, reps=reps):
+                source = src
+                if a > 0 and len(reps) > 1:
+                    source = reps[a % len(reps)]
+                    if source != src:
+                        self._reroutes += 1
+                got = self.faults.fault_point(
+                    "ship.transfer", payload=payload, chunk=cid,
+                    src=source, dst=dst, attempt=a)
+                if payload is not None and got is not None:
+                    self.checksums.verify(cid, got)
+                return got
+
+            try:
+                self.retrier.call("ship.transfer", attempt)
+            except RetryExhaustedError as e:
+                # Every replica route is spent — last resort is a fresh
+                # raw-file scan of the chunk's home file.
+                try:
+                    self.retrier.call(
+                        "scan.read",
+                        lambda a, cid=cid: self.faults.fault_point(
+                            "scan.read", chunk=cid, attempt=a))
+                    self._raw_fallbacks += 1
+                except RetryExhaustedError as e2:
+                    ops.extend([e.op, e2.op])
+                    drop.add(cid)
+        return drop, ops
+
+    def _arm_join_points(self, n_tasks: int) -> None:
+        """Arm the executor's declared fault points (host prep and/or
+        kernel dispatch) ahead of a join round; raises
+        RetryExhaustedError once a budget is spent. The join compute
+        itself is pure, so a retry that re-arms the point without
+        re-running the kernel is semantically a redo — the result is
+        identical by determinism."""
+        for point in getattr(self.executor, "fault_points",
+                             ("prep.build", "dispatch.kernel")):
+            self.retrier.call(
+                point,
+                lambda a, point=point: self.faults.fault_point(
+                    point, tasks=n_tasks, attempt=a))
+
+    def _guarded_count(self, tasks: List[JoinTask], eps: int
+                       ) -> Tuple[List[int], Dict[str, float]]:
+        """:meth:`_count_tasks` behind the prep/dispatch fault points
+        (a direct pass-through when the faults knob is off)."""
+        if self.faults is not None:
+            self._arm_join_points(len(tasks))
+        return self._count_tasks(tasks, eps)
+
+    def _assemble_degraded(self, query: "SimilarityJoinQuery",
+                           report: "QueryReport", drop: set,
+                           ship_ops: List[str], join_ops: List[str],
+                           matches: Optional[int]
+                           ) -> Optional[DegradedResult]:
+        """Fold planner-side degradation (scan failures recorded on the
+        report), dropped transfer chunks, and whole-join failures into
+        one :class:`~repro.faults.retry.DegradedResult`; ``None`` when
+        the query completed cleanly."""
+        boxes = list(report.degraded_boxes)
+        ops: List[str] = list(report.failed_ops) + list(ship_ops)
+        cm = {c.chunk_id: c for c in report.queried_chunks}
+        for cid in sorted(drop):
+            inter = cm[cid].box.intersection(query.box)
+            if inter is not None:
+                boxes.append(inter)
+        if join_ops:
+            # The whole join round failed: every queried region is
+            # unserved regardless of how its data arrived.
+            for c in report.queried_chunks:
+                inter = c.box.intersection(query.box)
+                if inter is not None:
+                    boxes.append(inter)
+            ops.extend(join_ops)
+        if not boxes and not ops:
+            return None
+        return make_degraded(query.box, tuple(boxes), tuple(ops),
+                             matches or 0)
+
     # ----------------------------------------------------------- execution
 
     def _cached_result(self, report: "QueryReport") -> ExecutedQuery:
@@ -238,15 +443,18 @@ class SimulatedBackend:
             report=report, time_scan_s=0.0, time_net_s=0.0,
             time_compute_s=0.0, time_opt_s=0.0,
             matches=report.cached_matches, backend=self.name,
-            **self._resilience_fields(report)))
+            **self._resilience_fields(report),
+            **self._fault_fields(None)))
 
     def _measured_ship(self, query: "SimilarityJoinQuery",
                        report: "QueryReport",
-                       coords_cache: Dict[int, np.ndarray]
+                       coords_cache: Dict[int, np.ndarray],
+                       skip: Optional[set] = None
                        ) -> Tuple[Optional[float], Optional[int]]:
         """Per-query measured transfer replay: the simulated backend
         moves no real bytes (the mesh backend overrides this with real
-        ``jax.device_put`` shipping)."""
+        ``jax.device_put`` shipping, skipping ``skip``'s degraded
+        chunks)."""
         return None, None
 
     def _count_tasks(self, tasks: List[JoinTask], eps: int
@@ -264,17 +472,26 @@ class SimulatedBackend:
         time_scan = self.modeled_scan_time(report)
         time_net = self.modeled_net_time(report)
 
+        drop, ship_ops = self._guard_transfers(query, report)
         matches: Optional[int] = None
-        stats = None
-        tasks, work_by_node, _, _ = self.gather_join_tasks(query, report)
+        stats: Dict[str, float] = {}
+        join_ops: List[str] = []
+        tasks, work_by_node, _, _ = self.gather_join_tasks(
+            query, report, exclude=drop)
         if report.join_plan is not None and self.execute_joins:
-            matches = sum(self.executor.count_pairs(tasks, query.eps))
-            stats = getattr(self.executor, "last_stats", None)
+            try:
+                got, stats = self._guarded_count(tasks, query.eps)
+                matches = sum(got)
+            except RetryExhaustedError as e:
+                join_ops.append(e.op)
+                matches = 0
+                stats = {}
         time_compute = (max(work_by_node.values(), default=0)
                         / self.cost.cell_pairs_per_sec)
 
         t_opt = report.opt_time_chunking_s + report.opt_time_evict_place_s
-        stats = stats or {}
+        degraded = self._assemble_degraded(query, report, drop, ship_ops,
+                                           join_ops, matches)
         return self._record(ExecutedQuery(
             report=report, time_scan_s=time_scan, time_net_s=time_net,
             time_compute_s=time_compute, time_opt_s=t_opt, matches=matches,
@@ -287,7 +504,8 @@ class SimulatedBackend:
             artifact_misses=stats.get("artifact_misses"),
             block_pairs_bitmap_killed=stats.get("block_pairs_bitmap_killed"),
             bitmap_build_s=stats.get("bitmap_build_s"),
-            **self._resilience_fields(report)))
+            **self._resilience_fields(report),
+            **self._fault_fields(degraded)))
 
     # ----------------------------------- cross-batch MQO (execute_batch)
 
@@ -372,15 +590,28 @@ class SimulatedBackend:
         reports = list(reports)
         if self.mqo != "on":
             return [self.execute(q, r) for q, r in zip(queries, reports)]
-        gathered = [None if r.result_cache_hit
-                    else self.gather_join_tasks(q, r)
-                    for q, r in zip(queries, reports)]
+        guards = [None if r.result_cache_hit
+                  else self._guard_transfers(q, r)
+                  for q, r in zip(queries, reports)]
+        gathered = [None if g is None
+                    else self.gather_join_tasks(q, r, exclude=g[0])
+                    for g, q, r in zip(guards, queries, reports)]
         unique, refs, counters = self._dedup_tasks(
             gathered, [q.eps for q in queries])
         counts: List[int] = []
         batch_stats: Dict[str, float] = {}
+        batch_failed_op: Optional[str] = None
         if self.execute_joins and unique:
-            counts, batch_stats = self._execute_unique(unique)
+            try:
+                if self.faults is not None:
+                    self._arm_join_points(len(unique))
+                counts, batch_stats = self._execute_unique(unique)
+            except RetryExhaustedError as e:
+                # The batch's single shared join round failed: every
+                # live query is served degraded (zero-count tasks).
+                batch_failed_op = e.op
+                counts = [0] * len(unique)
+                batch_stats = {}
         live = [i for i, g in enumerate(gathered) if g is not None]
         last_live = live[-1] if live else None
         out: List[ExecutedQuery] = []
@@ -388,11 +619,16 @@ class SimulatedBackend:
             if gathered[i] is None:
                 out.append(self._cached_result(r))
                 continue
+            drop, ship_ops = guards[i]
             _, work_by_node, coords_cache, _ = gathered[i]
-            m_net, m_bytes = self._measured_ship(q, r, coords_cache)
+            m_net, m_bytes = self._measured_ship(q, r, coords_cache,
+                                                 skip=drop)
             matches: Optional[int] = None
             if r.join_plan is not None and self.execute_joins:
                 matches = sum(counts[u] for u in refs[i])
+            join_ops = [batch_failed_op] if batch_failed_op else []
+            degraded = self._assemble_degraded(q, r, drop, ship_ops,
+                                               join_ops, matches)
             stats = batch_stats if i == last_live else {}
             measuring = m_net is not None
             m_compute = (stats.get("measured_compute_s",
@@ -419,5 +655,6 @@ class SimulatedBackend:
                 bitmap_build_s=stats.get("bitmap_build_s"),
                 mqo_tasks_total=total, mqo_tasks_executed=executed,
                 mqo_shared_hits=shared,
-                **self._resilience_fields(r))))
+                **self._resilience_fields(r),
+                **self._fault_fields(degraded))))
         return out

@@ -221,6 +221,31 @@ class CacheState:
         replica-set change with an unchanged primary)."""
         return frozenset(self.locations.items())
 
+    def audit_locations(self, n_nodes: int) -> List[str]:
+        """Well-formedness check over the replica map for the invariant
+        auditor: every location tuple must be non-empty and
+        duplicate-free, name only nodes in ``[0, n_nodes)``, and belong
+        to a resident chunk. Returns human-readable violation strings
+        (empty when the map is consistent)."""
+        problems: List[str] = []
+        for cid, reps in self.locations.items():
+            if not reps:
+                problems.append(f"chunk {cid} has an empty replica tuple")
+                continue
+            if len(set(reps)) != len(reps):
+                problems.append(
+                    f"chunk {cid} replica tuple {reps} has duplicates")
+            bad = [n for n in reps if not 0 <= n < n_nodes]
+            if bad:
+                problems.append(
+                    f"chunk {cid} replica tuple {reps} names unknown "
+                    f"node(s) {bad} (cluster has {n_nodes})")
+            if cid not in self.cached:
+                problems.append(
+                    f"chunk {cid} has locations {reps} but is not "
+                    f"resident")
+        return problems
+
     # ------------------------------------------------------------ mutation
 
     def remap_split(self, parent_id: int, leaves: List[ChunkMeta]) -> None:

@@ -92,7 +92,10 @@ class RawArrayCluster:
                  replication: str = "off",
                  replica_k: int = 2,
                  replication_threshold: float = 3.0,
-                 telemetry: "str | Telemetry | None" = "off"):
+                 telemetry: "str | Telemetry | None" = "off",
+                 faults: Any = "off",
+                 retry: Any = None,
+                 audit: str = "auto"):
         if join_fn is not None and join_backend != "numpy":
             raise ValueError(
                 "join_fn overrides the join predicate of the numpy "
@@ -114,7 +117,7 @@ class RawArrayCluster:
             result_cache_ttl_s=result_cache_ttl_s,
             replication=replication, replica_k=replica_k,
             replication_threshold=replication_threshold,
-            telemetry=telemetry)
+            telemetry=telemetry, faults=faults, retry=retry, audit=audit)
         self.backend.bind(self.coordinator)
 
     @property

@@ -24,11 +24,13 @@ Policy combos (see ``repro.core.policies``): ``cost``, ``chunk_lru``,
 from __future__ import annotations
 
 import dataclasses
+import operator
 from typing import (TYPE_CHECKING, Callable, Dict, List, Optional, Sequence,
-                    Set, Union)
+                    Set, Tuple, Union)
 
 if TYPE_CHECKING:  # duck-typed at runtime to avoid a package cycle
     from repro.arrayio.catalog import Catalog, FileReader
+    from repro.faults import FaultInjector, RetryPolicy
 from repro.core.cache_state import CacheState
 from repro.core.chunk import ChunkMeta
 from repro.core.chunk_manager import ChunkManager
@@ -44,12 +46,21 @@ from repro.core.policies import (EvictionContext, PlacementContext, POLICIES,
 from repro.core.result_cache import (RESULT_CACHE_MODES, ResultCache,
                                      ResultEntry)
 from repro.core.rtree import RefineStats
+from repro.faults.audit import InvariantAuditor
+from repro.faults.errors import (BatchInFlightError, RetryExhaustedError,
+                                 ScanError)
+from repro.faults.injector import make_faults
+from repro.faults.retry import Retrier, make_retry
 from repro.obs.clock import Clock, as_clock
 from repro.obs.telemetry import EventChannel, Telemetry, make_telemetry
 
-__all__ = ["POLICIES", "REPLICATION_MODES", "REUSE_MODES",
+__all__ = ["AUDIT_MODES", "POLICIES", "REPLICATION_MODES", "REUSE_MODES",
            "RESULT_CACHE_MODES", "SimilarityJoinQuery", "QueryReport",
            "CacheCoordinator"]
+
+# Invariant-auditor knob: "auto" (default) audits whenever fault
+# injection is armed, "on" always audits, "off" never does.
+AUDIT_MODES = ("auto", "on", "off")
 
 # Semantic cache reuse knob: "off" preserves the seed pipeline exactly
 # (every query goes through the catalog/scan path, whole chunks ship);
@@ -101,6 +112,13 @@ class QueryReport:
     # before chunking/join-planning/policy rounds ran for this query.
     result_cache_hit: bool = False
     cached_matches: Optional[int] = None
+    # Degraded-mode observables (both empty unless a retry budget was
+    # exhausted during planning — see ``repro.faults``): sub-boxes of
+    # the query that could not be served, and the operations that gave
+    # up on them. The backend folds execution-time failures in and
+    # surfaces the union as ``ExecutedQuery.degraded``.
+    degraded_boxes: Tuple[Box, ...] = ()
+    failed_ops: Tuple[str, ...] = ()
 
 
 @dataclasses.dataclass
@@ -124,6 +142,8 @@ class _QueryPlan:
     reuse_hits: int = 0
     reuse_bytes_served: int = 0
     reuse_scan_skips: int = 0
+    degraded_boxes: List[Box] = dataclasses.field(default_factory=list)
+    failed_ops: List[str] = dataclasses.field(default_factory=list)
 
 
 class CacheCoordinator:
@@ -159,7 +179,12 @@ class CacheCoordinator:
                  replication: str = "off", replica_k: int = 2,
                  replication_threshold: float = 3.0,
                  telemetry: Union[str, Telemetry, None] = None,
-                 clock: Union[Clock, Callable[[], float], None] = None):
+                 clock: Union[Clock, Callable[[], float], None] = None,
+                 faults: "Union[str, FaultInjector, Dict[str, float], None]"
+                 = "off",
+                 retry: "Union[str, RetryPolicy, Dict[str, float], None]"
+                 = None,
+                 audit: str = "auto"):
         if reuse not in REUSE_MODES:
             raise ValueError(f"unknown reuse mode {reuse!r}; "
                              f"expected one of {REUSE_MODES}")
@@ -185,6 +210,27 @@ class CacheCoordinator:
         self.telemetry = make_telemetry(telemetry)
         self.clock = (as_clock(clock) if clock is not None
                       else self.telemetry.clock)
+        # Transient-fault pipeline (see ``repro.faults``): the seeded
+        # injector behind the ``fault_point`` seam (None = seam never
+        # consulted, seed-exact), the shared retrier both the planner
+        # and the execution backend route transient failures through,
+        # and the cross-layer invariant auditor ("auto" = armed with
+        # faults). All off by default.
+        if audit not in AUDIT_MODES:
+            raise ValueError(f"unknown audit mode {audit!r}; "
+                             f"expected one of {AUDIT_MODES}")
+        self.faults = make_faults(faults, clock=self.clock)
+        self.retry_policy = make_retry(retry)
+        self.retrier = (Retrier(self.retry_policy, clock=self.clock,
+                                tracer=self.telemetry.tracer)
+                        if self.faults is not None else None)
+        self.auditor: Optional[InvariantAuditor] = None
+        if audit == "on" or (audit == "auto" and self.faults is not None):
+            self.auditor = InvariantAuditor(self)
+        # fail_node guard rails: reject crash-restarts mid-batch and
+        # double-failing a node before any admission round re-ran.
+        self._in_batch = False
+        self._last_failed: Optional[int] = None
 
         self.chunks = ChunkManager(catalog, reader, min_cells,
                                    node_budget_bytes, clock=self.clock)
@@ -223,6 +269,11 @@ class CacheCoordinator:
                                             ttl_s=result_cache_ttl_s,
                                             clock=self.clock)
             self.cache.add_listener(self.result_cache)
+        if self.auditor is not None:
+            # Listener registration is observational only (the auditor's
+            # hooks never mutate); the actual invariant passes run via
+            # explicit ``auditor.audit()`` calls after sync points.
+            self.cache.add_listener(self.auditor)
         # Cumulative semantic-reuse counters (bench_caching surfaces them).
         self.stats: Dict[str, float] = {
             "reuse_hits": 0, "reuse_bytes_served": 0,
@@ -320,140 +371,157 @@ class CacheCoordinator:
                 plan_pos.append(i)
         if not to_plan:                    # pure-hit batch: planner untouched
             return [hit_reports[i] for i in range(len(queries))]
-        plans: List[_QueryPlan] = []
-        batch_scanned: Set[int] = set()    # files materialized this batch
-        for q in to_plan:
-            self.query_counter += 1
-            self.planner_invocations += 1
-            if self.spec.granularity == "file":
-                plans.append(self._plan_file_query(q, self.query_counter))
-            else:
-                plans.append(self._plan_chunked_query(
-                    q, self.query_counter, batch_scanned))
+        # Planning + policy rounds mutate residency wholesale; a
+        # crash-restart interleaved here would corrupt accounting, so
+        # fail_node is rejected while the flag is up (typed error).
+        self._in_batch = True
+        try:
+            plans: List[_QueryPlan] = []
+            batch_scanned: Set[int] = set()    # files materialized this batch
+            for q in to_plan:
+                self.query_counter += 1
+                self.planner_invocations += 1
+                if self.spec.granularity == "file":
+                    plans.append(self._plan_file_query(q, self.query_counter))
+                else:
+                    plans.append(self._plan_chunked_query(
+                        q, self.query_counter, batch_scanned))
 
-        tracer = self.telemetry.tracer
-        t0 = self.clock.now()
-        chunk_bytes, file_bytes = self.chunks.size_tables()
-        # An early query's chunk may have been split by a later query in
-        # the same batch: remap every access onto the present leaf set
-        # (identity for a batch of one) before the policy rounds.
-        accesses: List[QueryAccess] = []
-        for p in plans:
-            queried_now: List[ChunkMeta] = []
-            by_file_now: Dict[int, List[int]] = {}
-            for cm in p.queried:
-                for u in self.chunks.current_units(cm):
-                    queried_now.append(u)
-                    by_file_now.setdefault(u.file_id, []).append(u.chunk_id)
-            accesses.append(QueryAccess(p.query_index, queried_now,
-                                        by_file_now))
-        deferred_evicted = 0
-        if self.spec.granularity == "chunk":
-            # File units admit online during the scan loop; chunk units
-            # admit here, in one Alg.-2/LRU/LFU round over the batch.
-            with tracer.span("policy.evict", queries=len(plans)):
-                deferred_evicted = self.eviction.finalize_batch(
-                    EvictionContext(
-                        accesses=accesses, chunk_bytes=chunk_bytes,
-                        file_bytes=file_bytes, state=self.cache,
-                        chunks=self.chunks))
-
-        replicas: Dict[int, Set[int]] = {}
-        for p in plans:
-            for cid, nodes in p.join_plan.replicas.items():
-                replicas.setdefault(cid, set()).update(nodes)
-        with tracer.span("policy.place", queries=len(plans)):
-            placement, extra_bytes = self.placement.place(PlacementContext(
-                replicas=replicas,
-                queried=[cm for acc in accesses for cm in acc.queried],
-                join_history=self.join_history, chunk_bytes=chunk_bytes,
-                node_budgets=self.cache.placement_budgets(),
-                state=self.cache, home_of=self.chunks.home_node,
-                decay=self.decay, history_window=self.history_window))
-        if placement is not None:
-            # Keep the eviction policy's residency view in sync with
-            # placement drops (no-op for cost: triples re-enter as
-            # uncached bytes next round, the seed behavior).
-            for cid in placement.dropped:
-                self.eviction.discard(cid)
-        if self.replication != "off":
-            # Replication round: update the decayed access frequencies
-            # from this batch's (remapped) touch set, then let the policy
-            # re-apply/promote secondaries into whatever budget the
-            # eviction/placement rounds left free. Runs strictly after
-            # them so residency and primaries are already final — which
-            # is what makes secondaries cheaper to drop than sole copies.
-            with tracer.span("policy.replicate", queries=len(plans)):
-                for cid in list(self.access_freq):
-                    self.access_freq[cid] *= self.REPLICA_FREQ_DECAY
-                    if self.access_freq[cid] < 1e-3:
-                        del self.access_freq[cid]
-                for acc in accesses:
-                    for cm in acc.queried:
-                        self.access_freq[cm.chunk_id] = \
-                            self.access_freq.get(cm.chunk_id, 0.0) + 1.0
-                shed = self.replicator.replicate(ReplicationContext(
-                    state=self.cache, chunk_bytes=chunk_bytes,
-                    freq=self.access_freq, home_of=self.chunks.home_node))
-            self.stats["replicas_dropped"] += shed
-            self.events.post("replicas_dropped", shed)
+            tracer = self.telemetry.tracer
+            t0 = self.clock.now()
+            chunk_bytes, file_bytes = self.chunks.size_tables()
+            # An early query's chunk may have been split by a later query in
+            # the same batch: remap every access onto the present leaf set
+            # (identity for a batch of one) before the policy rounds.
+            accesses: List[QueryAccess] = []
             for p in plans:
-                self.stats["replica_hits"] += p.join_plan.replica_hits
-        t_evict_place = self.clock.now() - t0
+                queried_now: List[ChunkMeta] = []
+                by_file_now: Dict[int, List[int]] = {}
+                for cm in p.queried:
+                    for u in self.chunks.current_units(cm):
+                        queried_now.append(u)
+                        by_file_now.setdefault(u.file_id, []).append(u.chunk_id)
+                accesses.append(QueryAccess(p.query_index, queried_now,
+                                            by_file_now))
+            deferred_evicted = 0
+            if self.spec.granularity == "chunk":
+                # File units admit online during the scan loop; chunk units
+                # admit here, in one Alg.-2/LRU/LFU round over the batch.
+                with tracer.span("policy.evict", queries=len(plans)):
+                    deferred_evicted = self.eviction.finalize_batch(
+                        EvictionContext(
+                            accesses=accesses, chunk_bytes=chunk_bytes,
+                            file_bytes=file_bytes, state=self.cache,
+                            chunks=self.chunks))
 
-        # Policy rounds reassign the resident set wholesale; reconcile any
-        # device-backed buffer bindings (no-op without a device backend).
-        self.cache.sync_devices()
-
-        if self.reuse == "on":
-            # Policy rounds reassign the resident set wholesale; reconcile
-            # the coverage index so the next batch's rewrite sees it.
-            self.cache.sync_coverage(self.chunks.meta_of)
+            replicas: Dict[int, Set[int]] = {}
             for p in plans:
-                self.stats["reuse_hits"] += p.reuse_hits
-                self.stats["reuse_bytes_served"] += p.reuse_bytes_served
-                self.stats["residual_bytes_scanned"] += \
-                    sum(p.scan_bytes_by_node.values())
-                self.stats["reuse_scan_skips"] += p.reuse_scan_skips
-                if p.rewrite is not None and p.rewrite.fully_covered:
-                    self.stats["reuse_fully_covered_queries"] += 1
+                for cid, nodes in p.join_plan.replicas.items():
+                    replicas.setdefault(cid, set()).update(nodes)
+            with tracer.span("policy.place", queries=len(plans)):
+                placement, extra_bytes = self.placement.place(PlacementContext(
+                    replicas=replicas,
+                    queried=[cm for acc in accesses for cm in acc.queried],
+                    join_history=self.join_history, chunk_bytes=chunk_bytes,
+                    node_budgets=self.cache.placement_budgets(),
+                    state=self.cache, home_of=self.chunks.home_node,
+                    decay=self.decay, history_window=self.history_window))
+            if placement is not None:
+                # Keep the eviction policy's residency view in sync with
+                # placement drops (no-op for cost: triples re-enter as
+                # uncached bytes next round, the seed behavior).
+                for cid in placement.dropped:
+                    self.eviction.discard(cid)
+            if self.replication != "off":
+                # Replication round: update the decayed access frequencies
+                # from this batch's (remapped) touch set, then let the policy
+                # re-apply/promote secondaries into whatever budget the
+                # eviction/placement rounds left free. Runs strictly after
+                # them so residency and primaries are already final — which
+                # is what makes secondaries cheaper to drop than sole copies.
+                with tracer.span("policy.replicate", queries=len(plans)):
+                    for cid in list(self.access_freq):
+                        self.access_freq[cid] *= self.REPLICA_FREQ_DECAY
+                        if self.access_freq[cid] < 1e-3:
+                            del self.access_freq[cid]
+                    for acc in accesses:
+                        for cm in acc.queried:
+                            self.access_freq[cm.chunk_id] = \
+                                self.access_freq.get(cm.chunk_id, 0.0) + 1.0
+                    shed = self.replicator.replicate(ReplicationContext(
+                        state=self.cache, chunk_bytes=chunk_bytes,
+                        freq=self.access_freq, home_of=self.chunks.home_node))
+                self.stats["replicas_dropped"] += shed
+                self.events.post("replicas_dropped", shed)
+                for p in plans:
+                    self.stats["replica_hits"] += p.join_plan.replica_hits
+            t_evict_place = self.clock.now() - t0
 
-        if self.telemetry.enabled:
-            self._record_cache_health(chunk_bytes)
+            # Policy rounds reassign the resident set wholesale; reconcile any
+            # device-backed buffer bindings (no-op without a device backend).
+            self.cache.sync_devices()
 
-        cached_bytes = self.cache.cached_bytes(chunk_bytes)
-        cached_chunks = len(self.cache.cached)
-        out: List[Optional[QueryReport]] = [
-            hit_reports.get(i) for i in range(len(queries))]
-        for i, p in enumerate(plans):
-            last = i == len(plans) - 1
-            out[plan_pos[i]] = (QueryReport(
-                query_index=p.query_index, policy=self.policy,
-                files_considered=p.files_considered,
-                files_pruned=p.files_pruned,
-                files_scanned=p.files_scanned,
-                scan_bytes_by_node=p.scan_bytes_by_node,
-                decode_cells_by_node=p.decode_cells_by_node,
-                queried_chunks=p.queried, queried_cells=p.queried_cells,
-                join_plan=p.join_plan,
-                placement=placement if last else None,
-                placement_extra_bytes=extra_bytes if last else 0,
-                cached_bytes_after=cached_bytes,
-                cached_chunks_after=cached_chunks,
-                evicted_items=p.online_evicted
-                + (deferred_evicted if last else 0),
-                opt_time_chunking_s=p.opt_time_chunking_s,
-                opt_time_evict_place_s=t_evict_place if last else 0.0,
-                refine_stats=p.refine_stats, batch_size=len(plans),
-                reuse_hits=p.reuse_hits,
-                reuse_bytes_served=p.reuse_bytes_served,
-                residual_bytes_scanned=(
-                    sum(p.scan_bytes_by_node.values())
-                    if self.reuse == "on" else 0),
-                reuse_scan_skips=p.reuse_scan_skips,
-                reuse_fully_covered=(p.rewrite is not None
-                                     and p.rewrite.fully_covered)))
-        return out
+            if self.reuse == "on":
+                # Policy rounds reassign the resident set wholesale; reconcile
+                # the coverage index so the next batch's rewrite sees it.
+                self.cache.sync_coverage(self.chunks.meta_of)
+                for p in plans:
+                    self.stats["reuse_hits"] += p.reuse_hits
+                    self.stats["reuse_bytes_served"] += p.reuse_bytes_served
+                    self.stats["residual_bytes_scanned"] += \
+                        sum(p.scan_bytes_by_node.values())
+                    self.stats["reuse_scan_skips"] += p.reuse_scan_skips
+                    if p.rewrite is not None and p.rewrite.fully_covered:
+                        self.stats["reuse_fully_covered_queries"] += 1
+
+            if self.auditor is not None:
+                # Cross-check the listener-coupled tiers right after every
+                # policy round's sync points (see repro.faults.audit).
+                self.auditor.audit()
+            # A completed admission round re-populates the cluster; the
+            # double-fail guard resets so the next crash can target any node.
+            self._last_failed = None
+
+            if self.telemetry.enabled:
+                self._record_cache_health(chunk_bytes)
+
+            cached_bytes = self.cache.cached_bytes(chunk_bytes)
+            cached_chunks = len(self.cache.cached)
+            out: List[Optional[QueryReport]] = [
+                hit_reports.get(i) for i in range(len(queries))]
+            for i, p in enumerate(plans):
+                last = i == len(plans) - 1
+                out[plan_pos[i]] = (QueryReport(
+                    query_index=p.query_index, policy=self.policy,
+                    files_considered=p.files_considered,
+                    files_pruned=p.files_pruned,
+                    files_scanned=p.files_scanned,
+                    scan_bytes_by_node=p.scan_bytes_by_node,
+                    decode_cells_by_node=p.decode_cells_by_node,
+                    queried_chunks=p.queried, queried_cells=p.queried_cells,
+                    join_plan=p.join_plan,
+                    placement=placement if last else None,
+                    placement_extra_bytes=extra_bytes if last else 0,
+                    cached_bytes_after=cached_bytes,
+                    cached_chunks_after=cached_chunks,
+                    evicted_items=p.online_evicted
+                    + (deferred_evicted if last else 0),
+                    opt_time_chunking_s=p.opt_time_chunking_s,
+                    opt_time_evict_place_s=t_evict_place if last else 0.0,
+                    refine_stats=p.refine_stats, batch_size=len(plans),
+                    reuse_hits=p.reuse_hits,
+                    reuse_bytes_served=p.reuse_bytes_served,
+                    residual_bytes_scanned=(
+                        sum(p.scan_bytes_by_node.values())
+                        if self.reuse == "on" else 0),
+                    reuse_scan_skips=p.reuse_scan_skips,
+                    reuse_fully_covered=(p.rewrite is not None
+                                         and p.rewrite.fully_covered),
+                    degraded_boxes=tuple(p.degraded_boxes),
+                    failed_ops=tuple(p.failed_ops)))
+            return out
+        finally:
+            self._in_batch = False
 
     # -------------------------------------------- cache-health telemetry
 
@@ -508,12 +576,15 @@ class CacheCoordinator:
         """Write-back after execution: store a planned query's computed
         match count (plus the observables a future hit will serve) under
         the current residency version. No-op when the tier is off, the
-        query was itself a hit, or the backend computed no matches
-        (``execute_joins=False``)."""
+        query was itself a hit, the backend computed no matches
+        (``execute_joins=False``), or the query degraded — a partial
+        match count must never be served to a future exact repeat."""
         if self.result_cache is None:
             return
         report = executed.report
         if report.result_cache_hit or executed.matches is None:
+            return
+        if getattr(executed, "degraded", None) is not None:
             return
         self.result_cache.store(
             ResultCache.key_of(query.box, query.eps),
@@ -565,9 +636,30 @@ class CacheCoordinator:
         any replica-set change — no stored result computed against a
         dead replica is ever served). Returns this event's counters;
         they also accumulate in :attr:`stats` and ride the next
-        ``ExecutedQuery`` via :meth:`drain_exec_counters`."""
+        ``ExecutedQuery`` via :meth:`drain_exec_counters`.
+
+        Guard rails: a non-integral or out-of-range ``node`` raises
+        ``ValueError`` before any accounting is touched; so does failing
+        the same node twice with no admission batch in between (the
+        node is still empty — a second "crash" would double-count
+        recovery). Calling this mid-``process_batch`` raises the typed
+        :class:`~repro.faults.errors.BatchInFlightError`."""
+        try:
+            node = operator.index(node)
+        except TypeError:
+            raise ValueError(
+                f"node must be an integer, got {node!r}") from None
         if not 0 <= node < self.n_nodes:
             raise ValueError(f"node {node} outside 0..{self.n_nodes - 1}")
+        if self._in_batch:
+            raise BatchInFlightError(
+                f"fail_node({node}) called while an admission batch is in "
+                f"flight; crash-restarts are only valid between batches")
+        if node == self._last_failed:
+            raise ValueError(
+                f"node {node} already failed with no admission batch since; "
+                f"it is still empty — failing it again would corrupt "
+                f"recovery accounting")
         recover_span = self.telemetry.tracer.begin("recover", node=node)
         t0 = self.clock.now()
         chunk_bytes, _ = self.chunks.size_tables()
@@ -581,7 +673,8 @@ class CacheCoordinator:
             nbytes = chunk_bytes.get(cid, 0)
             if survivors:
                 self.cache.set_replicas(cid, survivors)
-                if self._fits_at(node, nbytes, chunk_bytes):
+                if (self._fits_at(node, nbytes, chunk_bytes)
+                        and self._readmit_ok(cid, node)):
                     self.cache.set_replicas(cid, survivors + (node,))
                     from_replica += nbytes
                     readmits += 1
@@ -589,14 +682,16 @@ class CacheCoordinator:
                 self.cache.drop(cid)
                 home = (self.chunks.home_node(cid)
                         if self.chunks.meta_of(cid) is not None else None)
-                if home is not None and self._fits_at(home, nbytes,
-                                                      chunk_bytes):
+                if (home is not None
+                        and self._fits_at(home, nbytes, chunk_bytes)
+                        and self._readmit_ok(cid, home)):
                     self.cache.cached.add(cid)
                     self.cache.set_replicas(cid, (home,))
                     from_raw += nbytes
                     readmits += 1
                 else:
-                    # Not recoverable right now: release any eviction-
+                    # Not recoverable right now (no budget, or the
+                    # readmit itself retried out): release any eviction-
                     # policy bookkeeping so the id cannot resurrect into
                     # residency without a fresh scan.
                     self.eviction.discard(cid)
@@ -610,10 +705,29 @@ class CacheCoordinator:
         }
         self.telemetry.tracer.end(recover_span)
         self.stats["node_failures"] += 1
+        self._last_failed = node
+        if self.auditor is not None:
+            self.auditor.audit()
         for k, v in event.items():
             self.stats[k] += v
             self.events.post(k, v)
         return event
+
+    def _readmit_ok(self, cid: int, node: int) -> bool:
+        """One guarded ``recover.readmit`` crossing for re-admitting lost
+        chunk ``cid`` onto ``node`` during crash recovery. True (always,
+        when faults are off) means proceed; False means the readmit
+        retried out and the chunk stays unrecovered this round."""
+        if self.faults is None:
+            return True
+        try:
+            self.retrier.call(
+                "recover.readmit",
+                lambda a: self.faults.fault_point(
+                    "recover.readmit", chunk=cid, node=node, attempt=a))
+            return True
+        except RetryExhaustedError:
+            return False
 
     # ---- per-query planning: chunk granularity (cost, chunk_lru, ...) ----
 
@@ -641,13 +755,22 @@ class CacheCoordinator:
         reuse_hits = 0
         reuse_bytes = 0
         scan_skips = 0
+        degraded: List[Box] = []
+        failed_ops: List[str] = []
         t0 = self.clock.now()
         rstats = RefineStats()
         scan_span = tracer.begin("plan.scan", query=l,
                                  files=len(candidates))
         for meta in candidates:
             first_touch = meta.file_id not in self.chunks.trees
-            tree = self.chunks.tree(meta)
+            try:
+                tree = self._guarded_scan(
+                    meta, query,
+                    arm=lambda m=meta: m.file_id not in self.chunks.trees,
+                    fn=lambda m=meta: self.chunks.tree(m))
+            except RetryExhaustedError as e:
+                self._degrade_file(meta, query, degraded, failed_ops, e.op)
+                continue
             overlapping = tree.overlapping(query.box)
             if not overlapping:
                 pruned += 1           # refined boxes prune the file entirely
@@ -669,6 +792,19 @@ class CacheCoordinator:
                 if not needs_scan:
                     scan_skips += 1
             miss = needs_scan and meta.file_id not in batch_scanned
+            if miss and not first_touch and self.faults is not None:
+                # Stale chunks force a rescan of an already-built file:
+                # a distinct scan.read crossing (the first-touch read was
+                # armed inside _guarded_scan above).
+                try:
+                    self.retrier.call(
+                        "scan.read",
+                        lambda a, m=meta: self.faults.fault_point(
+                            "scan.read", file=m.file_id, attempt=a))
+                except RetryExhaustedError as e:
+                    self._degrade_file(meta, query, degraded, failed_ops,
+                                       e.op)
+                    continue
             chunks = tree.refine(query.box, rstats)
             self.chunks.remap_after_splits(tree, self.cache, self.eviction)
             if miss:
@@ -720,7 +856,8 @@ class CacheCoordinator:
             queried=queried, queried_cells=cells_in_q, join_plan=jplan,
             opt_time_chunking_s=t_chunking, refine_stats=rstats,
             rewrite=rewrite, reuse_hits=reuse_hits,
-            reuse_bytes_served=reuse_bytes, reuse_scan_skips=scan_skips)
+            reuse_bytes_served=reuse_bytes, reuse_scan_skips=scan_skips,
+            degraded_boxes=degraded, failed_ops=failed_ops)
 
     # ---- per-query planning: file granularity (file_lru, file_lfu) ----
 
@@ -751,11 +888,21 @@ class CacheCoordinator:
         evicted = 0
         reuse_hits = 0
         reuse_bytes = 0
+        degraded: List[Box] = []
+        failed_ops: List[str] = []
         scan_span = tracer.begin("plan.scan", query=l,
                                  files=len(candidates))
         for meta in candidates:
             unit = self.chunks.file_unit(meta)
             resident = self.eviction.is_resident(unit.chunk_id)
+            try:
+                coords, _ = self._guarded_scan(
+                    meta, query,
+                    arm=lambda r=resident: not r,
+                    fn=lambda m=meta: self.reader.read(m.file_id))
+            except RetryExhaustedError as e:
+                self._degrade_file(meta, query, degraded, failed_ops, e.op)
+                continue
             if not resident:
                 scans.append(meta.file_id)
                 scan_bytes[meta.node] = (scan_bytes.get(meta.node, 0)
@@ -764,7 +911,6 @@ class CacheCoordinator:
                 decode_cells[meta.node][meta.fmt] += meta.n_cells
             evicted += self.eviction.admit_online(unit, self.cache)
             queried.append(unit)
-            coords, _ = self.reader.read(meta.file_id)
             n_in_q = int(points_in_box(coords, query.box).sum())
             cells_in_q += n_in_q
             if reuse_on and resident:
@@ -785,4 +931,46 @@ class CacheCoordinator:
             queried=queried, queried_cells=cells_in_q, join_plan=jplan,
             opt_time_chunking_s=0.0, refine_stats=RefineStats(),
             online_evicted=evicted, rewrite=rewrite, reuse_hits=reuse_hits,
-            reuse_bytes_served=reuse_bytes)
+            reuse_bytes_served=reuse_bytes,
+            degraded_boxes=degraded, failed_ops=failed_ops)
+
+    # ------------------------------------------- guarded scan plumbing
+
+    def _guarded_scan(self, meta, query: SimilarityJoinQuery,
+                      arm: Callable[[], bool], fn: Callable[[], object]):
+        """Run one raw-file scan/decode operation under the ``scan.read``
+        fault point and the shared retry policy.
+
+        ``arm()`` decides whether this crossing performs a *real* read
+        (first touch / non-resident unit) — only then is the fault point
+        consulted. A typed :class:`ScanError` escaping ``fn`` is
+        annotated with the queried box; with faults off it propagates to
+        the caller (satellite: typed scan errors), with faults on it is
+        transient and retried until the budget exhausts
+        (:class:`RetryExhaustedError` — the caller degrades the file)."""
+        def attempt(attempt_no: int = 0):
+            if self.faults is not None and arm():
+                self.faults.fault_point("scan.read", file=meta.file_id,
+                                        attempt=attempt_no)
+            try:
+                return fn()
+            except ScanError as e:
+                if e.box is None:
+                    e.box = query.box
+                raise
+        if self.faults is None:
+            return attempt()
+        return self.retrier.call("scan.read", attempt)
+
+    def _degrade_file(self, meta, query: SimilarityJoinQuery,
+                      degraded: List[Box], failed_ops: List[str],
+                      op: str) -> None:
+        """Record a file whose scan retried out: the file's overlap with
+        the query box becomes a failed sub-box of the eventual
+        :class:`~repro.faults.retry.DegradedResult`, and the file is
+        skipped for this query (raw files are durable — a later query
+        re-attempts with a fresh fault schedule)."""
+        inter = meta.box.intersection(query.box)
+        if inter is not None:
+            degraded.append(inter)
+        failed_ops.append(op)

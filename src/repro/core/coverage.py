@@ -142,6 +142,12 @@ class CoverageIndex:
         """The indexed (resident) chunk-id set."""
         return set(self._entries)
 
+    def box_of(self, chunk_id: int) -> Optional[Box]:
+        """The indexed extent for ``chunk_id`` (``None`` if absent) —
+        the invariant auditor compares it against chunk metadata."""
+        meta = self._entries.get(chunk_id)
+        return meta.box if meta is not None else None
+
     def _file_box(self, file_id: int) -> Optional[Box]:
         bb = self._file_bb.get(file_id)
         if bb is None and self._by_file.get(file_id):

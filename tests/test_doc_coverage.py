@@ -1,8 +1,9 @@
 """Doc-coverage gate: every public class/function in ``src/repro/core``,
-``src/repro/backend``, ``src/repro/kernels``, and ``src/repro/obs`` must
-carry a docstring (100% aggregate), enforced by the stdlib
-``tools/check_docstrings.py`` checker (an ``interrogate`` equivalent
-that needs no extra dependency). CI runs the same command standalone."""
+``src/repro/backend``, ``src/repro/kernels``, ``src/repro/obs``, and
+``src/repro/faults`` must carry a docstring (100% aggregate), enforced
+by the stdlib ``tools/check_docstrings.py`` checker (an ``interrogate``
+equivalent that needs no extra dependency). CI runs the same command
+standalone."""
 import subprocess
 import sys
 from pathlib import Path
@@ -16,7 +17,8 @@ def test_core_doc_coverage_gate():
          str(REPO / "src" / "repro" / "core"),
          str(REPO / "src" / "repro" / "backend"),
          str(REPO / "src" / "repro" / "kernels"),
-         str(REPO / "src" / "repro" / "obs"), "--fail-under", "100"],
+         str(REPO / "src" / "repro" / "obs"),
+         str(REPO / "src" / "repro" / "faults"), "--fail-under", "100"],
         capture_output=True, text=True)
     assert proc.returncode == 0, proc.stdout + proc.stderr
     assert "PASSED" in proc.stdout

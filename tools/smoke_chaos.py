@@ -1,0 +1,134 @@
+#!/usr/bin/env python
+"""CI smoke gate for the transient-fault pipeline (ISSUE 10 satellite).
+
+Runs a seeded Zipf repeat workload twice through a replicated cluster —
+once fault-free, once under a seeded fault storm (error + latency +
+corruption faults at every fault point) — and fails unless
+
+  * ``faults_injected > 0`` and ``retries > 0`` — catches a dead seam
+    (fault points never armed) or a retrier that never engages;
+  * at least one transfer re-routed to a surviving replica — catches a
+    retry loop that hammers the same dead source instead of re-routing;
+  * the ``InvariantAuditor`` reports ZERO violations — catches a
+    listener-coupled cache tier diverging under the storm;
+  * every query that completed (non-degraded) has a match count
+    bit-identical to the fault-free reference — catches a retry/degrade
+    path serving partial or corrupted results as complete;
+  * the same seed reproduces the identical injection schedule — catches
+    nondeterminism in the injector's per-site RNG streams.
+
+Usage (both CI tier-1 jobs run exactly this; the mesh job passes
+``--backend jax_mesh``):
+
+    PYTHONPATH=src python tools/smoke_chaos.py [--backend jax_mesh]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+
+#: Per-crossing fault rate of the storm (ship.transfer is boosted so the
+#: replica re-route path demonstrably engages in a short workload).
+STORM_RATE = 0.10
+SHIP_RATE = 0.45
+STORM_SEED = 1234
+
+
+def build_storm():
+    """The smoke's seeded fault storm: every point at :data:`STORM_RATE`
+    with all three kinds, except ``ship.transfer`` which fires error and
+    corruption faults at :data:`SHIP_RATE` so retries must re-route and
+    the per-chunk checksums must catch bit-flipped payloads."""
+    from repro.faults import FAULT_POINTS, FaultInjector, FaultSpec
+    specs = [FaultSpec("ship.transfer", SHIP_RATE,
+                       kinds=("error", "corrupt"))]
+    specs += [FaultSpec(p, STORM_RATE, kinds=("error", "latency", "corrupt"))
+              for p in FAULT_POINTS if p != "ship.transfer"]
+    return FaultInjector(specs, seed=STORM_SEED)
+
+
+def main(argv=None) -> int:
+    """Run the chaos smoke workload; returns an exit code."""
+    from repro.arrayio.catalog import FileReader, build_catalog
+    from repro.arrayio.generator import make_ptf_files
+    from repro.core.cluster import RawArrayCluster, workload_summary
+
+    from repro.core.workload import zipf_workload
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--backend", default="simulated",
+                    choices=("simulated", "jax_mesh"))
+    args = ap.parse_args(argv)
+
+    files = make_ptf_files(n_files=12, cells_per_file_mean=700, seed=11)
+    catalog, data = build_catalog(files,
+                                  tempfile.mkdtemp(prefix="smoke_chaos_"),
+                                  "fits", n_nodes=4)
+    reader = FileReader(catalog, data)
+    # field_frac=0.5 makes query boxes span files on several nodes, so
+    # the join planner actually ships chunks — the storm needs live
+    # ``ship.transfer`` crossings to demonstrate replica re-routing.
+    queries = zipf_workload(catalog.domain, n_queries=24, n_templates=3,
+                            s=1.5, eps=150, field_frac=0.5, seed=3)
+
+    def run(faults):
+        cluster = RawArrayCluster(
+            catalog, reader, 4, 400_000, policy="cost", min_cells=64,
+            backend=args.backend, replication="hot", replica_k=2,
+            replication_threshold=2.0, faults=faults)
+        executed = cluster.run_workload(queries, batch_size=3)
+        return cluster, executed
+
+    _, ref = run("off")
+    ref_m = [e.matches for e in ref]
+    if any(e.faults_injected is not None for e in ref):
+        print("FAIL: faults='off' run carries fault counters — the "
+              "seed-parity gate leaks", file=sys.stderr)
+        return 1
+
+    cluster, executed = run(build_storm())
+    summ = workload_summary(executed)
+    injected = summ.get("faults_injected", 0)
+    retries = summ.get("retries", 0)
+    reroutes = summ.get("transfer_reroutes", 0)
+    violations = summ.get("audit_violations", 0)
+    degraded = int(summ.get("degraded_queries", 0))
+    print(f"storm: injected={injected} retries={retries} "
+          f"reroutes={reroutes} raw_fallbacks={summ.get('raw_fallbacks')} "
+          f"checksum_mismatch={summ.get('checksum_mismatch')} "
+          f"degraded={degraded} audit_violations={violations}")
+    if injected <= 0 or retries <= 0:
+        print("FAIL: the storm injected nothing or nothing retried — "
+              "the fault seam or retrier is dead", file=sys.stderr)
+        return 1
+    if reroutes < 1:
+        print("FAIL: no transfer re-routed to a surviving replica",
+              file=sys.stderr)
+        return 1
+    if violations != 0:
+        print("FAIL: invariant auditor found violations:\n"
+              + cluster.coordinator.auditor.report(), file=sys.stderr)
+        return 1
+    mismatched = [i for i, (e, m) in enumerate(zip(executed, ref_m))
+                  if e.degraded is None and e.matches != m]
+    if mismatched or sum(m or 0 for m in ref_m) <= 0:
+        print(f"FAIL: completed queries {mismatched} differ from the "
+              f"fault-free reference (partial/corrupt results served as "
+              f"complete)", file=sys.stderr)
+        return 1
+
+    cluster2, executed2 = run(build_storm())
+    if (cluster.coordinator.faults.schedule_log
+            != cluster2.coordinator.faults.schedule_log):
+        print("FAIL: same-seed storms produced different injection "
+              "schedules", file=sys.stderr)
+        return 1
+    print(f"OK: storm injected+retried+re-routed, zero audit violations, "
+          f"{len(executed) - degraded}/{len(executed)} completed queries "
+          f"bit-identical, schedule reproducible")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
